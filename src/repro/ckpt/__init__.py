@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    AsyncCheckpointer, latest_step, restore, save)

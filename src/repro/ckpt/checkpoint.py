@@ -1,0 +1,178 @@
+"""Atomic, elastic, keep-N checkpointing for pytrees.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       {step, leaves: [{path, shape, dtype, file}]}
+            shard_<i>.npz       numpy arrays (possibly several leaves each)
+            COMMITTED           zero-byte marker written LAST
+
+Guarantees:
+* **Atomicity** — everything is written into ``step_<N>.tmp`` and renamed;
+  the COMMITTED marker is written after the rename + fsync. ``restore``
+  and ``latest_step`` ignore directories without the marker, so a
+  preemption mid-save can never corrupt the restore path.
+* **Elasticity** — arrays are stored UNSHARDED (gathered before save), so
+  a checkpoint written on 512 devices restores onto any device count /
+  mesh shape; the caller re-shards with ``jax.device_put`` (see
+  ``runtime.elastic``). Host-count-agnostic by construction.
+* **keep-N retention** — older committed steps beyond ``keep`` are pruned
+  after a successful commit (never before).
+* **Async** — ``AsyncCheckpointer`` snapshots to host memory synchronously
+  (cheap) and writes in a background thread, overlapping the next step's
+  compute; ``wait()`` joins before the next save or on preemption.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+_MARKER = "COMMITTED"
+_LEAVES_PER_SHARD = 64
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(directory: str, step: int, tree, keep: Optional[int] = None) -> str:
+    """Write ``tree`` at ``step``; returns the committed directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = _step_dir(directory, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": []}
+    for si in range(0, len(leaves), _LEAVES_PER_SHARD):
+        chunk = leaves[si:si + _LEAVES_PER_SHARD]
+        fname = f"shard_{si // _LEAVES_PER_SHARD:05d}.npz"
+        arrays = {}
+        for j, (path, leaf) in enumerate(chunk):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"a{j}"
+            arrays[key] = arr
+            manifest["leaves"].append({
+                "path": path, "file": fname, "key": key,
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+            })
+        np.savez(os.path.join(tmp, fname), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # commit marker LAST: restore ignores uncommitted step dirs
+    with open(os.path.join(final, _MARKER), "w") as f:
+        f.flush()
+        os.fsync(f.fileno())
+
+    if keep is not None:
+        for s in committed_steps(directory)[:-keep]:
+            shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+    return final
+
+
+def committed_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, _MARKER)):
+                out.append(int(name[len("step_"):]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: Optional[int] = None,
+            target: Any = None) -> Tuple[int, Any]:
+    """Load (step, tree). With ``target`` (a pytree prototype), leaves are
+    returned in target's treedef order and validated against its
+    shapes/dtypes; otherwise a flat {path: array} dict is returned."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = _step_dir(directory, step)
+    if not os.path.exists(os.path.join(d, _MARKER)):
+        raise FileNotFoundError(f"checkpoint step {step} is not committed")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    cache: Dict[str, Any] = {}
+    by_path: Dict[str, np.ndarray] = {}
+    for entry in manifest["leaves"]:
+        if entry["file"] not in cache:
+            cache[entry["file"]] = np.load(os.path.join(d, entry["file"]))
+        by_path[entry["path"]] = cache[entry["file"]][entry["key"]]
+
+    if target is None:
+        return step, by_path
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, proto in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_path[key]
+        want_shape = tuple(np.shape(proto))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != {want_shape}")
+        leaves.append(arr.astype(np.asarray(proto).dtype)
+                      if hasattr(proto, "dtype") else arr)
+    return step, jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), leaves)
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint IO with compute: snapshot now, write later."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        # device_get synchronously (consistent snapshot), write in thread
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            try:
+                save(self.directory, step, host_tree, keep=self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

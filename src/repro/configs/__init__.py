@@ -1,0 +1,141 @@
+"""Architecture + shape registry for the assigned (arch x shape) grid.
+
+One module per architecture (exact public-literature config as ``CONFIG``
+and a reduced same-family ``SMOKE`` config). ``get_config`` resolves the
+assignment's hyphenated ids. ``input_specs`` builds ShapeDtypeStruct
+stand-ins for every model input of a cell — weak-type-correct, shardable,
+zero allocation (the dry-run pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.lm import ArchConfig
+
+__all__ = ["ARCH_NAMES", "SHAPES", "ShapeSpec", "get_config",
+           "get_smoke_config", "input_specs", "supports_shape", "cells",
+           "skip_reason"]
+
+ARCH_NAMES = (
+    "deepseek-v2-lite-16b",
+    "granite-moe-1b-a400m",
+    "minitron-4b",
+    "smollm-360m",
+    "granite-8b",
+    "gemma2-27b",
+    "recurrentgemma-9b",
+    "internvl2-26b",
+    "mamba2-1.3b",
+    "seamless-m4t-large-v2",
+)
+
+_MODULE_OF = {name: name.replace("-", "_").replace(".", "_")
+              for name in ARCH_NAMES}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _load(name: str):
+    if name not in _MODULE_OF:
+        raise KeyError(f"unknown architecture '{name}'; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULE_OF[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _load(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _load(name).SMOKE
+
+
+# ---------------------------------------------------------------------------
+# shape applicability (DESIGN.md §Arch-applicability)
+# ---------------------------------------------------------------------------
+def _cache_is_bounded(cfg: ArchConfig) -> bool:
+    """True iff decode-state memory is O(1) in sequence length: every block
+    type keeps constant-size state (ssd/rglru) or a ring-buffer window."""
+    bounded = {"ssd", "rglru"}
+    for btype in cfg.layer_pattern:
+        if btype in bounded:
+            continue
+        if btype == "local" and cfg.window is not None:
+            continue
+        return False
+    return True
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not _cache_is_bounded(cfg):
+        return ("unbounded full-attention KV cache at 524288 tokens "
+                "(needs sub-quadratic stack; see DESIGN.md)")
+    return None
+
+
+def supports_shape(arch: str, shape: str) -> bool:
+    return skip_reason(arch, shape) is None
+
+
+def cells(include_skipped: bool = False) -> List[Tuple[str, str]]:
+    out = []
+    for a in ARCH_NAMES:
+        for s in SHAPES:
+            if include_skipped or supports_shape(a, s):
+                out.append((a, s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs for the cell's step function.
+
+    train/prefill: tokens + labels (+ modality stand-ins).
+    decode: one new token against a seq_len KV cache (cache specs are
+    produced separately via ``jax.eval_shape`` of ``init_cache``).
+    """
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    if spec.kind in ("train", "prefill"):
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.enc_layers > 0:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), cfg.dtype)
+        elif cfg.n_prefix > 0:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), cfg.dtype)
+        if spec.kind == "prefill":
+            del out["labels"]
+        return out
+    # decode: one token, absolute positions at the end of a seq_len cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+    }

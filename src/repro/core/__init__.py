@@ -1,0 +1,22 @@
+"""repro.core — the paper's contribution: typed traces, DSL, contexts."""
+from repro.core.contexts import (Context, DefaultContext, LikelihoodContext,
+                                 MiniBatchContext, PriorContext)
+from repro.core.interpreters import (EarlyRejectError, Evaluator,
+                                     LinkedEvaluator, Sampler)
+from repro.core.model import Model, ModelGen, model
+from repro.core.primitives import (deterministic, factor, get_logp, missing,
+                                   observe, prior_factor, reject, reject_if,
+                                   sample, set_logp, submodel, tilde)
+from repro.core.varinfo import SiteMeta, TypedVarInfo, UntypedVarInfo, typify
+from repro.core.varname import VarName
+
+__all__ = [
+    "model", "Model", "ModelGen",
+    "sample", "observe", "tilde", "missing", "deterministic", "factor",
+    "prior_factor", "submodel",
+    "reject", "reject_if", "set_logp", "get_logp",
+    "Context", "DefaultContext", "LikelihoodContext", "PriorContext",
+    "MiniBatchContext",
+    "UntypedVarInfo", "TypedVarInfo", "typify", "SiteMeta", "VarName",
+    "Sampler", "Evaluator", "LinkedEvaluator", "EarlyRejectError",
+]

@@ -1,0 +1,221 @@
+"""Model-execution interpreters + the tilde primitive dispatch stack.
+
+DynamicPPL dispatches tilde statements on (sampler, context, varinfo) via
+Julia multiple dispatch. Here an explicit interpreter object sits on a
+stack; the tilde primitive dispatches to the innermost one. Three modes:
+
+* ``Sampler``          — eager discovery run: draws values, fills an
+                         UntypedVarInfo (the paper's initial untyped phase).
+* ``Evaluator``        — replay given CONSTRAINED values; accumulates logp
+                         per the active Context. jit-compatible.
+* ``LinkedEvaluator``  — replay given UNCONSTRAINED values; applies the
+                         per-site bijector and accumulates log|det J|
+                         (Stan-style HMC space). jit-compatible.
+
+Early rejection (paper §3.3): ``reject()`` / ``reject_if(cond)``. In eager
+mode this aborts the model run (a real compute shortcut, like Julia's
+``return`` after ``@logpdf() = -Inf``). In compiled mode TPUs cannot
+data-dependently branch, so the accumulator is masked to -inf instead —
+identical semantics, shortcut only in eager mode (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.bijectors import bijector_for
+from repro.core.contexts import Context, DefaultContext
+from repro.core.varinfo import TypedVarInfo, UntypedVarInfo
+from repro.core.varname import VarName
+
+__all__ = [
+    "Interpreter", "Sampler", "Evaluator", "LinkedEvaluator",
+    "EarlyRejectError", "current_interpreter", "push_interpreter",
+    "pop_interpreter",
+]
+
+_STACK: List["Interpreter"] = []
+
+
+def current_interpreter() -> "Interpreter":
+    if not _STACK:
+        raise RuntimeError(
+            "no active model interpreter — tilde primitives (sample/observe)"
+            " may only be called inside a model execution."
+        )
+    return _STACK[-1]
+
+
+def push_interpreter(it: "Interpreter") -> None:
+    _STACK.append(it)
+
+
+def pop_interpreter() -> "Interpreter":
+    return _STACK.pop()
+
+
+class EarlyRejectError(Exception):
+    """Raised by reject() in eager mode to shortcut the model run."""
+
+
+class Interpreter:
+    """Base: holds the context and the split prior/likelihood accumulators."""
+
+    eager = False
+
+    def __init__(self, ctx: Optional[Context] = None):
+        self.ctx = ctx if ctx is not None else DefaultContext()
+        self._lp_prior_parts: List[Any] = []
+        self._lp_lik_parts: List[Any] = []
+        self._override: Optional[Any] = None  # set_logp() escape hatch
+        self.deterministics: Dict[str, Any] = {}
+
+    # -- accumulation ----------------------------------------------------------
+    def accum(self, lp, observed: bool) -> None:
+        (self._lp_lik_parts if observed else self._lp_prior_parts).append(lp)
+
+    @property
+    def logp(self):
+        if self._override is not None:
+            return self._override
+        zero = jnp.zeros(())
+        lp_pri = sum(self._lp_prior_parts, start=zero)
+        lp_lik = sum(self._lp_lik_parts, start=zero)
+        return (self.ctx.prior_weight() * lp_pri
+                + self.ctx.likelihood_weight() * lp_lik)
+
+    def set_logp(self, value) -> None:
+        self._override = jnp.asarray(value, jnp.result_type(float))
+
+    def reject_if(self, cond) -> None:
+        if self.eager:
+            if bool(cond):
+                raise EarlyRejectError()
+        else:
+            self.accum(jnp.where(cond, -jnp.inf, 0.0), observed=False)
+
+    def record_deterministic(self, name: str, value) -> None:
+        self.deterministics[name] = value
+
+    # -- tilde dispatch ----------------------------------------------------------
+    def tilde(self, vn: VarName, dist, value, observed: bool):
+        raise NotImplementedError
+
+
+class Sampler(Interpreter):
+    """Eager discovery run: draw parameters, fill an UntypedVarInfo."""
+
+    eager = True
+
+    def __init__(self, key, vi: Optional[UntypedVarInfo] = None,
+                 ctx: Optional[Context] = None, init_strategy: str = "prior"):
+        super().__init__(ctx)
+        self.key = key
+        self.vi = vi if vi is not None else UntypedVarInfo()
+        self.init_strategy = init_strategy
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def tilde(self, vn: VarName, dist, value, observed: bool):
+        name = str(vn)
+        if observed:
+            if self.ctx.wants_site(vn.sym, True):
+                self.accum(dist.total_log_prob(value), observed=True)
+            return value
+        # parameter site
+        if name in self.vi:
+            val = self.vi[name]
+            self.vi.set(name, val, dist)  # refresh dist (params may change)
+        elif self.init_strategy == "uniform":
+            # Stan-style init: Uniform(-2, 2) in the UNCONSTRAINED space
+            bij = bijector_for(dist)
+            unc_shape = bij.unconstrained_shape(dist.shape)
+            u = jax.random.uniform(self._next_key(), unc_shape,
+                                   minval=-2.0, maxval=2.0)
+            val = bij.forward(u)
+            self.vi.set(name, val, dist)
+        else:
+            val = dist.sample(self._next_key())
+            self.vi.set(name, val, dist)
+        if self.ctx.wants_site(vn.sym, False):
+            self.accum(dist.total_log_prob(val), observed=False)
+        return val
+
+
+class Evaluator(Interpreter):
+    """Replay with given CONSTRAINED values (dict / Untyped / TypedVarInfo)."""
+
+    def __init__(self, values, ctx: Optional[Context] = None, eager: bool = False):
+        super().__init__(ctx)
+        self.values = values
+        self.eager = eager
+        self.new_dists: List[Any] = []  # dists seen this run, in site order
+
+    def _lookup(self, vn: VarName):
+        if isinstance(self.values, TypedVarInfo):
+            return self.values[vn]
+        src = self.values
+        name = str(vn)
+        if hasattr(src, "__contains__") and name in src:
+            return src[name]
+        if vn.indexed and vn.sym in src:  # element of a stacked value
+            arr = src[vn.sym]
+            idx = vn.index if len(vn.index) > 1 else vn.index[0]
+            return arr[idx]
+        raise KeyError(f"no value for site '{name}' in evaluator")
+
+    def tilde(self, vn: VarName, dist, value, observed: bool):
+        if observed:
+            if self.ctx.wants_site(vn.sym, True):
+                self.accum(dist.total_log_prob(value), observed=True)
+            return value
+        val = self._lookup(vn)
+        self.new_dists.append(dist)
+        if self.ctx.wants_site(vn.sym, False):
+            self.accum(dist.total_log_prob(val), observed=False)
+        return val
+
+
+class LinkedEvaluator(Interpreter):
+    """Replay with UNCONSTRAINED values from a linked TypedVarInfo.
+
+    For each parameter site: u -> x = bij.forward(u); accumulate
+    dist.log_prob(x) + log|det J(u)| so the density is correct on R^n.
+    The bijector is built from the RUNTIME dist instance (bounds may be
+    traced values) — matching DynamicPPL's per-site transform storage.
+    """
+
+    def __init__(self, tvi: TypedVarInfo, ctx: Optional[Context] = None,
+                 eager: bool = False):
+        assert tvi.linked, "LinkedEvaluator requires a linked TypedVarInfo"
+        super().__init__(ctx)
+        self.tvi = tvi
+        self.eager = eager
+        self.constrained: Dict[str, Any] = {}
+
+    def tilde(self, vn: VarName, dist, value, observed: bool):
+        if observed:
+            if self.ctx.wants_site(vn.sym, True):
+                self.accum(dist.total_log_prob(value), observed=True)
+            return value
+        i = self.tvi.site_index(vn.sym)
+        u_site = self.tvi.values[i]
+        meta = self.tvi.metas[i]
+        if vn.indexed and meta.grouped:
+            idx = vn.index if len(vn.index) > 1 else vn.index[0]
+            u = u_site[idx]
+            seen_key = str(vn)
+        else:
+            u = u_site
+            seen_key = vn.sym
+        bij = bijector_for(dist)
+        x = bij.forward(u)
+        if self.ctx.wants_site(vn.sym, False):
+            lp = dist.total_log_prob(x) + bij.forward_log_det_jacobian(u)
+            self.accum(lp, observed=False)
+        self.constrained[seen_key] = x
+        return x

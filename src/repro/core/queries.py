@@ -1,0 +1,124 @@
+"""Probability queries (paper §3.5) — the ``prob"lhs | rhs"`` string DSL.
+
+Julia's string macro becomes a parsed query string plus keyword bindings:
+
+    prob("X = Xnew, y = ynew | w = w0, s = 1.0, model = linreg",
+         Xnew=..., ynew=..., w0=..., linreg=linreg_gen)
+
+Grammar:  ``lhs | rhs`` where each side is ``name = expr, ...``.
+``expr`` is evaluated against the keyword bindings (plus numpy/jnp).
+``rhs`` must bind ``model``; it may bind ``chain`` (posterior samples:
+a dict of name -> (M, ...) stacked draws) for posterior-predictive queries.
+
+Semantics (matching the paper's three examples):
+* lhs has only DATA args of the model      -> likelihood p(data | params)
+* lhs has only PARAMETER names             -> prior p(params)
+* lhs has both                             -> joint p(data, params)
+* rhs has ``chain``                        -> posterior predictive
+  log( 1/M * sum_i exp(loglike_i) )  computed with logsumexp.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contexts import (DefaultContext, LikelihoodContext,
+                                 PriorContext)
+from repro.core.model import Model, ModelGen
+from repro.core.primitives import missing
+
+__all__ = ["prob", "parse_query"]
+
+
+def _split_top_level(s: str, sep: str) -> Tuple[str, ...]:
+    """Split on ``sep`` outside brackets/parens."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return tuple(p.strip() for p in parts if p.strip())
+
+
+def parse_query(spec: str, bindings: Dict[str, Any]) -> Tuple[Dict, Dict]:
+    """Parse ``"a = e1, b = e2 | c = e3, ..."`` into (lhs, rhs) dicts."""
+    if "|" not in spec:
+        raise ValueError("query must contain '|' separating target and given")
+    lhs_s, rhs_s = spec.split("|", 1)
+    env = {"np": np, "jnp": jnp}
+    env.update(bindings)
+
+    def parse_side(side: str) -> Dict[str, Any]:
+        out = {}
+        for item in _split_top_level(side, ","):
+            if "=" not in item:
+                # bare name: value comes from bindings under the same name
+                name = item.strip()
+                out[name] = env[name]
+                continue
+            name, expr = item.split("=", 1)
+            out[name.strip()] = eval(expr.strip(), {"__builtins__": {}}, env)
+        return out
+
+    return parse_side(lhs_s), parse_side(rhs_s)
+
+
+def _model_instance(gen_or_model, data_args: Dict[str, Any]) -> Model:
+    if isinstance(gen_or_model, Model):
+        return gen_or_model.bind(**data_args)
+    if isinstance(gen_or_model, ModelGen):
+        return gen_or_model(**data_args)
+    raise TypeError("rhs 'model =' must be a Model or ModelGen")
+
+
+def prob(spec: str, **bindings) -> jax.Array:
+    """Evaluate a probability query; returns the LOG probability (density)."""
+    lhs, rhs = parse_query(spec, bindings)
+    if "model" not in rhs:
+        raise ValueError("query rhs must bind 'model = <model>'")
+    gen = rhs.pop("model")
+    chain = rhs.pop("chain", None)
+
+    arg_names = set(gen.arg_names if isinstance(gen, ModelGen)
+                    else gen.gen.arg_names)
+
+    # split every name into model data-args vs parameter values
+    lhs_data = {k: v for k, v in lhs.items() if k in arg_names}
+    lhs_params = {k: v for k, v in lhs.items() if k not in arg_names}
+    rhs_data = {k: v for k, v in rhs.items() if k in arg_names}
+    rhs_params = {k: v for k, v in rhs.items() if k not in arg_names}
+
+    data_args = {**rhs_data, **lhs_data}
+    m = _model_instance(gen, data_args)
+
+    if chain is not None:
+        # posterior predictive: average likelihood over posterior draws
+        names = list(chain.keys())
+        M = np.shape(chain[names[0]])[0]
+
+        def loglike_one(draw):
+            vals = {**draw, **rhs_params}
+            return m.loglikelihood(vals)
+
+        draws = [{n: jnp.asarray(chain[n])[i] for n in names} for i in range(M)]
+        lls = jnp.stack([loglike_one(d) for d in draws])
+        return jax.scipy.special.logsumexp(lls) - jnp.log(float(M))
+
+    values = {**rhs_params, **lhs_params}
+    if lhs_params and not lhs_data:
+        ctx = PriorContext(frozenset(lhs_params))
+    elif lhs_data and not lhs_params:
+        ctx = LikelihoodContext()
+    else:
+        ctx = DefaultContext()
+    return m.logp_with_context(values, ctx)

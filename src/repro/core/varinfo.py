@@ -1,0 +1,279 @@
+"""VarInfo — the paper's central data structure (§2.2), adapted to JAX.
+
+``UntypedVarInfo`` is the dynamic discovery structure: a plain dict trace
+built while the model runs eagerly (the analogue of ``Vector{Real}`` storage
++ Julia dynamic dispatch). It can hold anything, but nothing about it is
+known to a compiler.
+
+``TypedVarInfo`` is the concretely-typed trace: per-site values with fixed
+shapes/dtypes, stored distributions, and static metadata. It is registered
+as a JAX pytree, so every downstream computation (log-joint, HMC step,
+training step) is ``jax.jit``-compiled against its structure — the XLA
+analogue of Julia emitting specialised machine code for concretely-typed
+storage. ``typify`` performs the paper's "type inference for traces":
+element sites written in loops (``x[0]``, ``x[1]``, …) are grouped into one
+stacked concretely-typed array, exactly like DynamicPPL's grouped metadata
+ranges.
+
+``link``/``invlink`` move values between the constrained support and the
+unconstrained reals (Stan-style) using the per-site stored distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bijectors import bijector_for
+from repro.core.varname import VarName
+
+__all__ = ["UntypedVarInfo", "TypedVarInfo", "typify", "SiteMeta"]
+
+_DISCRETE_SUPPORTS = ("discrete", "nonnegative_int", "binary")
+
+
+# ---------------------------------------------------------------------------
+# Untyped trace
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Record:
+    value: Any
+    dist: Any
+    order: int
+
+
+class UntypedVarInfo:
+    """Dynamic, mutable, anything-goes trace (paper's UntypedVarInfo)."""
+
+    def __init__(self):
+        self._records: Dict[str, _Record] = {}
+        self.extras: Dict[str, Any] = {}  # deterministic() sites
+
+    # dict-ish API -----------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return str(name) in self._records
+
+    def __getitem__(self, name: str):
+        return self._records[str(name)].value
+
+    def set(self, name: str, value, dist) -> None:
+        key = str(name)
+        if key in self._records:
+            rec = self._records[key]
+            rec.value, rec.dist = value, dist
+        else:
+            self._records[key] = _Record(value, dist, len(self._records))
+
+    def dist_of(self, name: str):
+        return self._records[str(name)].dist
+
+    def names(self) -> List[str]:
+        return sorted(self._records, key=lambda n: self._records[n].order)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {n: self._records[n].value for n in self.names()}
+
+    def __repr__(self):
+        inner = ", ".join(
+            f"{n}: {np.shape(self._records[n].value)}" for n in self.names()
+        )
+        return f"UntypedVarInfo({inner})"
+
+
+# ---------------------------------------------------------------------------
+# Typed trace
+# ---------------------------------------------------------------------------
+class SiteMeta(NamedTuple):
+    name: str            # symbol ("w"); grouped element sites share one sym
+    shape: Tuple[int, ...]
+    dtype: str
+    support: str
+    grouped: bool        # stacked from element sites x[0], x[1], ...
+    nelems: int          # number of element sites (1 if not grouped)
+    unc_shape: Tuple[int, ...]  # unconstrained shape (per link())
+
+
+def _meta_for(sym: str, value, dist, grouped: bool, nelems: int) -> SiteMeta:
+    shape = tuple(np.shape(value))
+    dtype = str(jnp.asarray(value).dtype)
+    support = getattr(dist, "support", "real")
+    if support in _DISCRETE_SUPPORTS:
+        unc_shape = shape
+    else:
+        unc_shape = tuple(bijector_for(dist).unconstrained_shape(shape))
+    return SiteMeta(sym, shape, dtype, support, grouped, nelems, unc_shape)
+
+
+class TypedVarInfo:
+    """Concretely-typed trace: pytree of per-site values + distributions.
+
+    ``linked=False``: values live on the constrained support.
+    ``linked=True``: values are unconstrained reals (HMC space).
+    """
+
+    def __init__(self, values: Tuple, dists: Tuple, metas: Tuple[SiteMeta, ...],
+                 linked: bool = False):
+        self.values = tuple(values)
+        self.dists = tuple(dists)
+        self.metas = tuple(metas)
+        self.linked = bool(linked)
+        self._index = {m.name: i for i, m in enumerate(self.metas)}
+
+    # -- lookups -------------------------------------------------------------
+    def site_index(self, sym: str) -> int:
+        return self._index[sym]
+
+    def __contains__(self, name) -> bool:
+        vn = name if isinstance(name, VarName) else VarName.parse(str(name))
+        return vn.sym in self._index
+
+    def raw_value(self, sym: str):
+        return self.values[self._index[sym]]
+
+    def dist_of(self, sym: str):
+        return self.dists[self._index[sym]]
+
+    def constrained_values(self) -> Tuple:
+        if not self.linked:
+            return self.values
+        out = []
+        for v, d, m in zip(self.values, self.dists, self.metas):
+            if m.support in _DISCRETE_SUPPORTS:
+                out.append(v)
+            else:
+                out.append(bijector_for(d).forward(v))
+        return tuple(out)
+
+    def __getitem__(self, name):
+        """Constrained value of a site (or element of a grouped site)."""
+        vn = name if isinstance(name, VarName) else VarName.parse(str(name))
+        i = self._index[vn.sym]
+        v = self.constrained_values()[i]
+        if vn.indexed and self.metas[i].grouped:
+            idx = vn.index if len(vn.index) > 1 else vn.index[0]
+            return v[idx]
+        return v
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {m.name: v for m, v in zip(self.metas, self.constrained_values())}
+
+    # -- link / invlink --------------------------------------------------------
+    def link(self) -> "TypedVarInfo":
+        if self.linked:
+            return self
+        out = []
+        for v, d, m in zip(self.values, self.dists, self.metas):
+            if m.support in _DISCRETE_SUPPORTS:
+                raise ValueError(
+                    f"site '{m.name}' is discrete ({m.support}); cannot link "
+                    "for gradient-based inference — marginalise it instead."
+                )
+            out.append(bijector_for(d).inverse(v))
+        return TypedVarInfo(tuple(out), self.dists, self.metas, linked=True)
+
+    def invlink(self) -> "TypedVarInfo":
+        if not self.linked:
+            return self
+        return TypedVarInfo(self.constrained_values(), self.dists, self.metas,
+                            linked=False)
+
+    # -- flat vector interface (HMC / optimisers) -----------------------------
+    @property
+    def num_flat(self) -> int:
+        return int(sum(int(np.prod(m.unc_shape if self.linked else m.shape))
+                       for m in self.metas))
+
+    def flat(self) -> jax.Array:
+        parts = [jnp.ravel(v).astype(jnp.result_type(float)) for v in self.values]
+        if not parts:
+            return jnp.zeros((0,))
+        return jnp.concatenate(parts)
+
+    def replace_flat(self, vec: jax.Array) -> "TypedVarInfo":
+        out, off = [], 0
+        for v, m in zip(self.values, self.metas):
+            shape = m.unc_shape if self.linked else m.shape
+            n = int(np.prod(shape)) if shape else 1
+            chunk = vec[off:off + n].reshape(shape)
+            out.append(chunk.astype(v.dtype) if not self.linked else chunk)
+            off += n
+        return TypedVarInfo(tuple(out), self.dists, self.metas, self.linked)
+
+    def replace_values(self, values: Tuple) -> "TypedVarInfo":
+        return TypedVarInfo(tuple(values), self.dists, self.metas, self.linked)
+
+    def replace_site(self, sym: str, value) -> "TypedVarInfo":
+        i = self._index[sym]
+        vals = list(self.values)
+        vals[i] = value
+        return TypedVarInfo(tuple(vals), self.dists, self.metas, self.linked)
+
+    def __repr__(self):
+        inner = ", ".join(f"{m.name}:{m.shape}{'~' + m.support}" for m in self.metas)
+        return f"TypedVarInfo({'linked; ' if self.linked else ''}{inner})"
+
+
+def _tvi_flatten(tvi: TypedVarInfo):
+    return (tvi.values, tvi.dists), (tvi.metas, tvi.linked)
+
+
+def _tvi_unflatten(aux, children):
+    metas, linked = aux
+    values, dists = children
+    return TypedVarInfo(values, dists, metas, linked)
+
+
+jax.tree_util.register_pytree_node(TypedVarInfo, _tvi_flatten, _tvi_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# typify — the paper's trace type inference
+# ---------------------------------------------------------------------------
+def _try_stack_dists(dists: List[Any]):
+    """Stack per-element dist params into one batched dist if homogeneous."""
+    first = dists[0]
+    if not all(type(d) is type(first) for d in dists):
+        return first
+    try:
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dists)
+    except Exception:
+        return first
+
+
+def typify(uvi: UntypedVarInfo) -> TypedVarInfo:
+    """UntypedVarInfo -> TypedVarInfo (shape/dtype/support inference).
+
+    Element sites ``x[i]`` of one symbol are grouped into a stacked array
+    (DynamicPPL's metadata ranges); scalar/whole-array sites pass through.
+    """
+    groups: Dict[str, List[Tuple[VarName, Any, Any]]] = {}
+    order: List[str] = []
+    for name in uvi.names():
+        vn = VarName.parse(name)
+        if vn.sym not in groups:
+            groups[vn.sym] = []
+            order.append(vn.sym)
+        groups[vn.sym].append((vn, uvi[name], uvi.dist_of(name)))
+
+    values, dists, metas = [], [], []
+    for sym in order:
+        sites = groups[sym]
+        if len(sites) == 1 and not sites[0][0].indexed:
+            vn, val, dist = sites[0]
+            val = jnp.asarray(val)
+            values.append(val)
+            dists.append(dist)
+            metas.append(_meta_for(sym, val, dist, grouped=False, nelems=1))
+        else:
+            sites = sorted(sites, key=lambda s: s[0].index)
+            elems = [jnp.asarray(v) for _, v, _ in sites]
+            stacked = jnp.stack(elems)
+            dist = _try_stack_dists([d for _, _, d in sites])
+            values.append(stacked)
+            dists.append(dist)
+            metas.append(_meta_for(sym, stacked, dist, grouped=True,
+                                   nelems=len(sites)))
+    return TypedVarInfo(tuple(values), tuple(dists), tuple(metas), linked=False)

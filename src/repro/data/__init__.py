@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticTokens, host_shard  # noqa: F401

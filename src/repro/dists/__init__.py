@@ -1,0 +1,24 @@
+"""repro.dists — self-contained distribution library for the PPL."""
+from repro.dists.base import Distribution, register_dist
+from repro.dists.continuous import (
+    Beta, Cauchy, Exponential, Flat, Gamma, HalfCauchy, HalfNormal,
+    InverseGamma, Laplace, LogNormal, LogisticDist, Normal, StudentT,
+    TruncatedNormal, Uniform,
+)
+from repro.dists.discrete import (
+    Bernoulli, BernoulliLogits, Binomial, Categorical, DiscreteUniform,
+    Poisson,
+)
+from repro.dists.multivariate import (
+    Dirichlet, MixtureSameFamily, Multinomial, MvNormalDiag,
+)
+
+__all__ = [
+    "Distribution", "register_dist",
+    "Normal", "LogNormal", "HalfNormal", "Cauchy", "HalfCauchy", "StudentT",
+    "Uniform", "Beta", "Gamma", "InverseGamma", "Exponential", "Laplace",
+    "LogisticDist", "TruncatedNormal", "Flat",
+    "Poisson", "Bernoulli", "BernoulliLogits", "Binomial", "Categorical",
+    "DiscreteUniform",
+    "MvNormalDiag", "Dirichlet", "Multinomial", "MixtureSameFamily",
+]

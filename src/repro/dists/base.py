@@ -1,0 +1,107 @@
+"""Distribution base class and pytree registration.
+
+Distributions are frozen dataclasses registered as JAX pytrees so they can be
+stored inside traces (VarInfo) and cross jit boundaries. All parameter fields
+are dynamic (leaves); static config (e.g. event_ndims) lives on the class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Distribution", "register_dist"]
+
+
+class Distribution:
+    """Base class for all distributions.
+
+    Subclasses define parameter fields (dataclass), ``event_ndims`` (class
+    attr), ``log_prob``, ``sample`` and ``support`` (a string tag consumed by
+    ``repro.bijectors.bijector_for``).
+    """
+
+    event_ndims: int = 0
+    support: str = "real"  # real|positive|unit_interval|simplex|ordered|
+    #                        interval|discrete|nonnegative_int|binary
+
+    # -- shapes ------------------------------------------------------------
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        shapes = []
+        for leaf in jax.tree_util.tree_leaves(self):
+            s = jnp.shape(leaf)
+            if self.event_ndims:
+                s = s[: len(s) - self.event_ndims] if len(s) >= self.event_ndims else ()
+            shapes.append(s)
+        if not shapes:
+            return ()
+        return np.broadcast_shapes(*shapes)
+
+    @property
+    def event_shape(self) -> Tuple[int, ...]:
+        if self.event_ndims == 0:
+            return ()
+        for leaf in jax.tree_util.tree_leaves(self):
+            s = jnp.shape(leaf)
+            if len(s) >= self.event_ndims:
+                return tuple(s[len(s) - self.event_ndims:])
+        return ()
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.batch_shape) + tuple(self.event_shape)
+
+    # -- core API ----------------------------------------------------------
+    def log_prob(self, x) -> jax.Array:
+        """Elementwise log density over the batch shape (events reduced)."""
+        raise NotImplementedError
+
+    def total_log_prob(self, x) -> jax.Array:
+        """Scalar sum of ``log_prob`` over all batch dims."""
+        return jnp.sum(self.log_prob(x))
+
+    def sample(self, key, sample_shape: Tuple[int, ...] = ()) -> jax.Array:
+        raise NotImplementedError
+
+    def in_support(self, x) -> jax.Array:
+        """Boolean scalar: every element of x inside the support."""
+        return jnp.array(True)
+
+    # -- misc ----------------------------------------------------------------
+    @property
+    def dtype(self):
+        return jnp.result_type(float)
+
+    def __repr__(self) -> str:  # concise: Normal(loc=..., scale=...)
+        fields = dataclasses.fields(self)
+        args = ", ".join(f"{f.name}={getattr(self, f.name)!r}" for f in fields)
+        return f"{type(self).__name__}({args})"
+
+
+def register_dist(cls):
+    """Decorator: make ``cls`` a frozen dataclass + JAX pytree node."""
+    cls = dataclasses.dataclass(frozen=True, repr=False)(cls)
+    names = tuple(f.name for f in dataclasses.fields(cls))
+
+    def flatten(d):
+        return tuple(getattr(d, n) for n in names), None
+
+    def flatten_with_keys(d):
+        return (
+            tuple((jax.tree_util.GetAttrKey(n), getattr(d, n)) for n in names),
+            None,
+        )
+
+    def unflatten(aux: Any, children):
+        del aux
+        obj = object.__new__(cls)
+        for n, c in zip(names, children):
+            object.__setattr__(obj, n, c)
+        return obj
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten, flatten)
+    return cls

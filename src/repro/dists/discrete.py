@@ -1,0 +1,154 @@
+"""Discrete distributions (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+from repro.dists.base import Distribution, register_dist
+
+__all__ = ["Poisson", "Bernoulli", "BernoulliLogits", "Binomial", "Categorical",
+           "DiscreteUniform"]
+
+
+@register_dist
+class Poisson(Distribution):
+    rate: jax.Array = 1.0
+    support = "nonnegative_int"
+
+    def log_prob(self, x):
+        x = jnp.asarray(x, self.dtype)
+        return jsp.xlogy(x, self.rate) - self.rate - jsp.gammaln(x + 1.0)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        return jax.random.poisson(key, self.rate, shape)
+
+    def in_support(self, x):
+        return jnp.all(x >= 0)
+
+
+@register_dist
+class Bernoulli(Distribution):
+    probs: jax.Array = 0.5
+    support = "binary"
+
+    def log_prob(self, x):
+        x = jnp.asarray(x, self.dtype)
+        return jsp.xlogy(x, self.probs) + jsp.xlog1py(1.0 - x, -self.probs)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        return jax.random.bernoulli(key, self.probs, shape).astype(jnp.int32)
+
+    def in_support(self, x):
+        return jnp.all((x == 0) | (x == 1))
+
+
+@register_dist
+class BernoulliLogits(Distribution):
+    logits: jax.Array = 0.0
+    support = "binary"
+
+    def log_prob(self, x):
+        # x*logits - softplus(logits), numerically stable
+        x = jnp.asarray(x, self.dtype)
+        return x * self.logits - jax.nn.softplus(self.logits)
+
+    def total_log_prob(self, x):
+        import repro.kernels as _k
+        if _k.fused_logpdf_enabled() and jnp.size(x) >= 1024:
+            return _k.bernoulli_logits_logpmf_sum(self.logits, x)
+        return jnp.sum(self.log_prob(x))
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        return jax.random.bernoulli(key, jax.nn.sigmoid(self.logits), shape).astype(jnp.int32)
+
+    def in_support(self, x):
+        return jnp.all((x == 0) | (x == 1))
+
+
+@register_dist
+class Binomial(Distribution):
+    total_count: jax.Array = 1
+    probs: jax.Array = 0.5
+    support = "nonnegative_int"
+
+    def log_prob(self, x):
+        n = jnp.asarray(self.total_count, self.dtype)
+        x = jnp.asarray(x, self.dtype)
+        log_comb = jsp.gammaln(n + 1.0) - jsp.gammaln(x + 1.0) - jsp.gammaln(n - x + 1.0)
+        return log_comb + jsp.xlogy(x, self.probs) + jsp.xlog1py(n - x, -self.probs)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        n = int(jnp.max(jnp.asarray(self.total_count)))
+        u = jax.random.uniform(key, (n,) + shape)
+        return jnp.sum((u < self.probs).astype(jnp.int32), axis=0)
+
+    def in_support(self, x):
+        return jnp.all((x >= 0) & (x <= self.total_count))
+
+
+@register_dist
+class Categorical(Distribution):
+    """Categorical over the last axis of ``logits``."""
+
+    logits: jax.Array = None
+    support = "discrete"
+    event_ndims = 0  # value is an integer index; logits carry a trailing axis
+
+    @property
+    def num_categories(self):
+        return jnp.shape(self.logits)[-1]
+
+    @property
+    def batch_shape(self):
+        return jnp.shape(self.logits)[:-1]
+
+    @property
+    def event_shape(self):
+        return ()
+
+    @property
+    def shape(self):
+        return self.batch_shape
+
+    def log_prob(self, x):
+        logp = jax.nn.log_softmax(self.logits, axis=-1)
+        x = jnp.asarray(x)
+        return jnp.take_along_axis(logp, x[..., None], axis=-1)[..., 0]
+
+    def total_log_prob(self, x):
+        import repro.kernels as _k
+        if (_k.fused_logpdf_enabled() and jnp.ndim(self.logits) >= 2
+                and jnp.size(x) >= 256):
+            return _k.categorical_logits_logpmf_sum(self.logits, x)
+        return jnp.sum(self.log_prob(x))
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + tuple(self.batch_shape)
+        return jax.random.categorical(key, self.logits, shape=shape)
+
+    def in_support(self, x):
+        return jnp.all((x >= 0) & (x < self.num_categories))
+
+
+@register_dist
+class DiscreteUniform(Distribution):
+    low: jax.Array = 0
+    high: jax.Array = 1  # inclusive
+    support = "discrete"
+
+    def log_prob(self, x):
+        n = jnp.asarray(self.high - self.low + 1, self.dtype)
+        inside = (x >= self.low) & (x <= self.high)
+        return jnp.where(inside, -jnp.log(n), -jnp.inf)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        return jax.random.randint(key, shape, self.low, self.high + 1)
+
+    def in_support(self, x):
+        return jnp.all((x >= self.low) & (x <= self.high))

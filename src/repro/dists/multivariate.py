@@ -1,0 +1,101 @@
+"""Multivariate distributions (pure JAX)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+from repro.dists.base import Distribution, register_dist
+
+__all__ = ["MvNormalDiag", "Dirichlet", "Multinomial", "MixtureSameFamily"]
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+@register_dist
+class MvNormalDiag(Distribution):
+    loc: jax.Array = None
+    scale_diag: jax.Array = None
+    event_ndims = 1
+    support = "real"
+
+    def log_prob(self, x):
+        z = (x - self.loc) / self.scale_diag
+        return jnp.sum(-0.5 * z * z - jnp.log(self.scale_diag) - 0.5 * _LOG_2PI, axis=-1)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        return self.loc + self.scale_diag * jax.random.normal(key, shape, self.dtype)
+
+
+@register_dist
+class Dirichlet(Distribution):
+    concentration: jax.Array = None
+    event_ndims = 1
+    support = "simplex"
+
+    def log_prob(self, x):
+        a = self.concentration
+        norm = jnp.sum(jsp.gammaln(a), axis=-1) - jsp.gammaln(jnp.sum(a, axis=-1))
+        return jnp.sum(jsp.xlogy(a - 1.0, x), axis=-1) - norm
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + tuple(self.batch_shape)
+        return jax.random.dirichlet(key, self.concentration, shape)
+
+    def in_support(self, x):
+        row_ok = jnp.all(x >= 0) & jnp.all(x <= 1)
+        sums = jnp.sum(x, axis=-1)
+        return row_ok & jnp.all(jnp.abs(sums - 1.0) < 1e-4)
+
+
+@register_dist
+class Multinomial(Distribution):
+    total_count: jax.Array = 1
+    probs: jax.Array = None
+    event_ndims = 1
+    support = "nonnegative_int"
+
+    def log_prob(self, x):
+        x = jnp.asarray(x, self.dtype)
+        n = jnp.asarray(self.total_count, self.dtype)
+        log_coef = jsp.gammaln(n + 1.0) - jnp.sum(jsp.gammaln(x + 1.0), axis=-1)
+        return log_coef + jnp.sum(jsp.xlogy(x, self.probs), axis=-1)
+
+    def sample(self, key, sample_shape=()):
+        # counts via repeated categorical draws (OK for moderate n)
+        n = int(self.total_count)
+        k = jnp.shape(self.probs)[-1]
+        idx = jax.random.categorical(
+            key, jnp.log(self.probs), shape=(n,) + tuple(sample_shape) + tuple(self.batch_shape)
+        )
+        onehot = jax.nn.one_hot(idx, k, dtype=jnp.int32)
+        return jnp.sum(onehot, axis=0)
+
+
+@register_dist
+class MixtureSameFamily(Distribution):
+    """Finite mixture: ``mixing_logp`` (..., K) + component log-probs.
+
+    ``component_log_prob_fn`` is implicit: the caller provides per-component
+    log probs via ``components_log_prob(x)`` of shape (..., K). Stored here as
+    precomputed mixing weights plus a component Distribution whose leading
+    batch axis is the mixture axis.
+    """
+
+    mixing_logits: jax.Array = None
+    components: Distribution = None  # batch axis -1 (after x broadcast) = K
+
+    def log_prob(self, x):
+        # components.log_prob(x[..., None]) -> (..., K)
+        comp_lp = self.components.log_prob(x[..., None])
+        mix_lp = jax.nn.log_softmax(self.mixing_logits, axis=-1)
+        return jsp.logsumexp(mix_lp + comp_lp, axis=-1)
+
+    def sample(self, key, sample_shape=()):
+        k1, k2 = jax.random.split(key)
+        idx = jax.random.categorical(k1, self.mixing_logits, shape=tuple(sample_shape))
+        all_samples = self.components.sample(k2, tuple(sample_shape))
+        return jnp.take_along_axis(all_samples, idx[..., None], axis=-1)[..., 0]

@@ -1,0 +1,13 @@
+"""repro.infer — inference algorithms over typed traces."""
+from repro.infer.advi import ADVI, ADVIResult
+from repro.infer.chains import Chain, effective_sample_size, split_rhat
+from repro.infer.hmc import HMC, DualAveraging
+from repro.infer.map_estimate import MAP
+from repro.infer.mh import RWMH
+from repro.infer.nuts import NUTS
+from repro.infer.sgld import SGLD, make_sgld_step
+
+__all__ = [
+    "HMC", "NUTS", "RWMH", "SGLD", "make_sgld_step", "ADVI", "ADVIResult",
+    "MAP", "Chain", "effective_sample_size", "split_rhat", "DualAveraging",
+]

@@ -1,0 +1,109 @@
+"""Chain container + MCMC diagnostics (ESS, split-R-hat, summaries)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+__all__ = ["Chain", "effective_sample_size", "split_rhat"]
+
+
+class Chain:
+    """Posterior draws: dict name -> (num_chains, num_samples, ...) arrays.
+
+    Single-chain results are stored with a leading chain axis of 1.
+    """
+
+    def __init__(self, draws: Dict[str, Any], stats: Optional[Dict[str, Any]] = None):
+        self.draws = {k: np.asarray(v) for k, v in draws.items()}
+        self.stats = {k: np.asarray(v) for k, v in (stats or {}).items()}
+        first = next(iter(self.draws.values()))
+        self.num_chains, self.num_samples = first.shape[0], first.shape[1]
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.draws[name]
+
+    def names(self):
+        return list(self.draws)
+
+    def flat(self, name: str) -> np.ndarray:
+        """(num_chains*num_samples, ...) view of a variable."""
+        v = self.draws[name]
+        return v.reshape((-1,) + v.shape[2:])
+
+    def mean(self, name: str):
+        return self.flat(name).mean(axis=0)
+
+    def std(self, name: str):
+        return self.flat(name).std(axis=0)
+
+    def to_dict_of_flat(self) -> Dict[str, np.ndarray]:
+        return {n: self.flat(n) for n in self.names()}
+
+    def summary(self) -> str:
+        lines = [f"{'param':<18}{'mean':>12}{'std':>12}{'ess':>10}{'rhat':>8}"]
+        for n in self.names():
+            v = self.draws[n]
+            scalar = v.reshape(v.shape[0], v.shape[1], -1)[..., 0]
+            ess = effective_sample_size(scalar)
+            rhat = split_rhat(scalar)
+            lines.append(
+                f"{n:<18}{self.mean(n).ravel()[0]:>12.4f}"
+                f"{self.std(n).ravel()[0]:>12.4f}{ess:>10.1f}{rhat:>8.3f}"
+            )
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (f"Chain(chains={self.num_chains}, samples={self.num_samples}, "
+                f"vars={self.names()})")
+
+
+def _autocov(x: np.ndarray) -> np.ndarray:
+    n = x.shape[-1]
+    x = x - x.mean(axis=-1, keepdims=True)
+    nfft = int(2 ** np.ceil(np.log2(2 * n)))
+    f = np.fft.rfft(x, nfft, axis=-1)
+    acov = np.fft.irfft(f * np.conj(f), nfft, axis=-1)[..., :n].real
+    return acov / n
+
+
+def effective_sample_size(x: np.ndarray) -> float:
+    """Geyer initial-monotone ESS for (chains, samples) scalar draws."""
+    x = np.atleast_2d(np.asarray(x, dtype=np.float64))
+    m, n = x.shape
+    acov = _autocov(x)
+    mean_var = acov[:, 0].mean() * n / (n - 1.0)
+    var_plus = mean_var * (n - 1.0) / n
+    if m > 1:
+        var_plus += x.mean(axis=1).var(ddof=1)
+    rho = 1.0 - (mean_var - acov.mean(axis=0)) / var_plus
+    # Geyer initial-positive-monotone sequence over lag pairs
+    prev_pair = np.inf
+    tau = 1.0
+    t = 1
+    while t + 1 < n:
+        pair = rho[t] + rho[t + 1]
+        if pair < 0:
+            break
+        pair = min(pair, prev_pair)  # initial monotone
+        prev_pair = pair
+        tau += 2.0 * pair
+        t += 2
+    return float(m * n / max(tau, 1e-12))
+
+
+def split_rhat(x: np.ndarray) -> float:
+    """Split-chain potential scale reduction factor."""
+    x = np.atleast_2d(np.asarray(x, dtype=np.float64))
+    m, n = x.shape
+    half = n // 2
+    if half < 2:
+        return float("nan")
+    halves = np.concatenate([x[:, :half], x[:, half:2 * half]], axis=0)
+    m2, n2 = halves.shape
+    chain_means = halves.mean(axis=1)
+    chain_vars = halves.var(axis=1, ddof=1)
+    w = chain_vars.mean()
+    b = n2 * chain_means.var(ddof=1)
+    var_plus = (n2 - 1.0) / n2 * w + b / n2
+    return float(np.sqrt(var_plus / max(w, 1e-300)))

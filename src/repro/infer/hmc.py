@@ -1,0 +1,260 @@
+"""Static HMC — the paper's benchmark algorithm (§4: 4 leapfrog steps).
+
+Two execution paths, mirroring the paper's central comparison:
+
+* ``run``          — TYPED path: the log-density is specialised on the
+  TypedVarInfo structure and the whole chain runs inside one
+  ``jax.lax.scan`` under ``jit`` (the Stan-like compiled path).
+* ``run_untyped``  — UNTYPED path: every iteration re-executes the model
+  eagerly through the dynamic dict trace (Python dispatch per op, fresh
+  trace per call) — the honest analogue of ``Vector{Real}`` + dynamic
+  dispatch that the paper's typed traces eliminate.
+
+Both draw identical chains given the same key (same algorithm, same
+arithmetic), which is asserted in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contexts import Context
+from repro.core.model import Model
+from repro.core.varinfo import TypedVarInfo
+from repro.infer.chains import Chain
+
+__all__ = ["HMC", "DualAveraging"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DualAveraging:
+    """Nesterov dual-averaging step-size adaptation (Stan warmup)."""
+
+    target_accept: float = 0.8
+    gamma: float = 0.05
+    t0: float = 10.0
+    kappa: float = 0.75
+
+    def init(self, step_size):
+        mu = jnp.log(10.0 * step_size)
+        return (jnp.log(step_size), jnp.zeros(()), jnp.zeros(()), mu)
+
+    def update(self, state, accept_prob, t):
+        log_eps, log_eps_bar, h_bar, mu = state
+        t = t + 1.0
+        eta = 1.0 / (t + self.t0)
+        h_bar = (1.0 - eta) * h_bar + eta * (self.target_accept - accept_prob)
+        log_eps = mu - jnp.sqrt(t) / self.gamma * h_bar
+        w = jnp.power(t, -self.kappa)
+        log_eps_bar = w * log_eps + (1.0 - w) * log_eps_bar
+        return (log_eps, log_eps_bar, h_bar, mu)
+
+
+def _leapfrog(logdensity_and_grad: Callable, q, p, grad, step_size, n_steps: int):
+    """n_steps leapfrog updates with unit metric. Returns (q, p, logp, grad)."""
+
+    def body(carry, _):
+        q, p, grad = carry
+        p_half = p + 0.5 * step_size * grad
+        q_new = q + step_size * p_half
+        logp_new, grad_new = logdensity_and_grad(q_new)
+        p_new = p_half + 0.5 * step_size * grad_new
+        return (q_new, p_new, grad_new), logp_new
+
+    (q, p, grad), logps = jax.lax.scan(body, (q, p, grad), None, length=n_steps)
+    return q, p, logps[-1], grad
+
+
+def make_chain_fn(logdensity: Callable, num_samples: int, step_size: float,
+                  n_leapfrog: int, collect: bool = True) -> Callable:
+    """Build ``f(key, q0) -> (qs, logps, accept_probs)`` for a RAW flat
+    log-density. Used by the Table-1 harness so the typed-DSL path and the
+    hand-written "Stan-analogue" path run the EXACT same HMC program and
+    differ only in where the log-density came from."""
+
+    def ld_and_grad(q):
+        return jax.value_and_grad(logdensity)(q)
+
+    def hmc_step(carry, key):
+        q, logp, grad = carry
+        k_mom, k_acc = jax.random.split(key)
+        p0 = jax.random.normal(k_mom, q.shape)
+        q_new, p_new, logp_new, grad_new = _leapfrog(
+            ld_and_grad, q, p0, grad, step_size, n_leapfrog)
+        h0 = -logp + 0.5 * jnp.sum(p0 * p0)
+        h1 = -logp_new + 0.5 * jnp.sum(p_new * p_new)
+        log_accept = jnp.minimum(0.0, h0 - h1)
+        log_accept = jnp.where(jnp.isnan(log_accept), -jnp.inf, log_accept)
+        accept = jnp.log(jax.random.uniform(k_acc, ())) < log_accept
+        q = jnp.where(accept, q_new, q)
+        logp = jnp.where(accept, logp_new, logp)
+        grad = jnp.where(accept, grad_new, grad)
+        out = (q, logp, jnp.exp(log_accept)) if collect \
+            else (logp, jnp.exp(log_accept))
+        return (q, logp, grad), out
+
+    def chain(key, q0):
+        logp0, grad0 = ld_and_grad(q0)
+        keys = jax.random.split(key, num_samples)
+        (qf, _, _), outs = jax.lax.scan(hmc_step, (q0, logp0, grad0), keys)
+        if collect:
+            return outs
+        return (qf,) + outs
+
+    return chain
+
+
+@dataclasses.dataclass
+class HMC:
+    """Static HMC with a fixed number of leapfrog steps (paper setup)."""
+
+    step_size: float = 0.1
+    n_leapfrog: int = 4
+    adapt_step_size: bool = False
+    target_accept: float = 0.8
+
+    # -- typed, fully-compiled path ------------------------------------------
+    def run(self, key, m: Model, num_samples: int,
+            num_warmup: int = 0,
+            init_varinfo: Optional[TypedVarInfo] = None,
+            ctx: Optional[Context] = None,
+            num_chains: int = 1,
+            collect: bool = True) -> Chain:
+        k_init, k_run = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+        tvi = (init_varinfo if init_varinfo is not None
+               else m.typed_varinfo(k_init)).link()
+        logdensity = m.make_logdensity_fn(tvi, ctx=ctx)
+
+        def ld_and_grad(q):
+            return jax.value_and_grad(logdensity)(q)
+
+        da = DualAveraging(target_accept=self.target_accept)
+
+        def hmc_step(q, logp, grad, step_size, key):
+            k_mom, k_acc = jax.random.split(key)
+            p0 = jax.random.normal(k_mom, q.shape)
+            q_new, p_new, logp_new, grad_new = _leapfrog(
+                ld_and_grad, q, p0, grad, step_size, self.n_leapfrog)
+            h0 = -logp + 0.5 * jnp.sum(p0 * p0)
+            h1 = -logp_new + 0.5 * jnp.sum(p_new * p_new)
+            log_accept = jnp.minimum(0.0, h0 - h1)
+            log_accept = jnp.where(jnp.isnan(log_accept), -jnp.inf, log_accept)
+            accept = jnp.log(jax.random.uniform(k_acc, ())) < log_accept
+            q = jnp.where(accept, q_new, q)
+            logp = jnp.where(accept, logp_new, logp)
+            grad = jnp.where(accept, grad_new, grad)
+            return q, logp, grad, jnp.exp(log_accept), accept
+
+        def one_chain(key, q0):
+            logp0, grad0 = ld_and_grad(q0)
+
+            def warm_body(carry, inp):
+                q, logp, grad, da_state = carry
+                t, key = inp
+                step_size = jnp.exp(da_state[0]) if self.adapt_step_size \
+                    else jnp.asarray(self.step_size)
+                q, logp, grad, acc_prob, _ = hmc_step(q, logp, grad, step_size, key)
+                if self.adapt_step_size:
+                    da_state = da.update(da_state, acc_prob, t)
+                return (q, logp, grad, da_state), None
+
+            da_state = da.init(jnp.asarray(self.step_size))
+            if num_warmup > 0:
+                keys = jax.random.split(jax.random.fold_in(key, 1), num_warmup)
+                ts = jnp.arange(num_warmup, dtype=jnp.float32)
+                (q0, logp0, grad0, da_state), _ = jax.lax.scan(
+                    warm_body, (q0, logp0, grad0, da_state), (ts, keys))
+            final_step = jnp.exp(da_state[1]) if self.adapt_step_size \
+                else jnp.asarray(self.step_size)
+
+            def body(carry, key):
+                q, logp, grad = carry
+                q, logp, grad, acc_prob, accept = hmc_step(
+                    q, logp, grad, final_step, key)
+                out = (q, logp, acc_prob) if collect else (logp, acc_prob)
+                return (q, logp, grad), out
+
+            keys = jax.random.split(jax.random.fold_in(key, 2), num_samples)
+            (qf, logpf, _), outs = jax.lax.scan(body, (q0, logp0, grad0), keys)
+            if collect:
+                return outs  # (qs, logps, accs)
+            return (qf, *outs)
+
+        if num_chains == 1:
+            chain_fn = jax.jit(lambda k: one_chain(k, tvi.flat()))
+            outs = chain_fn(k_run)
+            qs, logps, accs = (o[None] for o in outs)  # add chain axis
+        else:
+            keys = jax.random.split(k_run, num_chains)
+            # overdispersed inits: Uniform(-1, 1) jitter around the
+            # discovery draw in unconstrained space — distinct starts
+            # (split-R-hat certifies mixing) without the pathological
+            # curvature extremes a fixed step size cannot escape
+            n_flat = tvi.flat().shape[0]
+            q0s = tvi.flat()[None] + jax.random.uniform(
+                jax.random.fold_in(k_init, 7), (num_chains, n_flat),
+                minval=-1.0, maxval=1.0)
+            chain_fn = jax.jit(jax.vmap(one_chain))
+            qs, logps, accs = chain_fn(keys, q0s)
+
+        return self._package(m, tvi, qs, logps, accs)
+
+    def _package(self, m: Model, tvi_linked: TypedVarInfo, qs, logps, accs) -> Chain:
+        """Map flat unconstrained draws back to constrained named arrays."""
+
+        def to_constrained(q):
+            vi = tvi_linked.replace_flat(q).invlink()
+            return vi.as_dict()
+
+        # vmap over (chains, samples)
+        draws = jax.jit(jax.vmap(jax.vmap(to_constrained)))(qs)
+        return Chain({k: np.asarray(v) for k, v in draws.items()},
+                     stats={"logp": logps, "accept_prob": accs})
+
+    # -- untyped eager path (the paper's slow general mode) -------------------
+    def run_untyped(self, key, m: Model, num_samples: int,
+                    init_varinfo: Optional[TypedVarInfo] = None) -> Chain:
+        """Same algorithm, executed through the dynamic untyped trace.
+
+        No jit anywhere: every log-density (and its gradient) re-traces the
+        Python model, dispatching dynamically — the UntypedVarInfo mode.
+        """
+        k_init, k_run = jax.random.split(key)
+        tvi = (init_varinfo if init_varinfo is not None
+               else m.typed_varinfo(k_init)).link()
+        logdensity = m.make_logdensity_fn(tvi)  # NOT jitted
+
+        rng = np.random.default_rng(np.asarray(jax.random.key_data(k_run))[-1])
+        q = np.asarray(tvi.flat())
+        logp = float(logdensity(jnp.asarray(q)))
+        grad = np.asarray(jax.grad(logdensity)(jnp.asarray(q)))
+
+        qs, logps, accs = [], [], []
+        for _ in range(num_samples):
+            p0 = rng.standard_normal(q.shape).astype(q.dtype)
+            qn, pn, gn = q.copy(), p0.copy(), grad.copy()
+            for _ in range(self.n_leapfrog):
+                pn = pn + 0.5 * self.step_size * gn
+                qn = qn + self.step_size * pn
+                # fresh eager evaluation each call — dynamic path
+                lpn = float(logdensity(jnp.asarray(qn)))
+                gn = np.asarray(jax.grad(logdensity)(jnp.asarray(qn)))
+                pn = pn + 0.5 * self.step_size * gn
+            h0 = -logp + 0.5 * float(p0 @ p0)
+            h1 = -lpn + 0.5 * float(pn @ pn)
+            log_acc = min(0.0, h0 - h1)
+            if np.isnan(log_acc):
+                log_acc = -np.inf
+            if np.log(rng.uniform()) < log_acc:
+                q, logp, grad = qn, lpn, gn
+            qs.append(q.copy())
+            logps.append(logp)
+            accs.append(np.exp(log_acc))
+
+        qs = jnp.asarray(np.stack(qs))[None]
+        return self._package(m, tvi, qs, np.asarray(logps)[None],
+                             np.asarray(accs)[None])

@@ -1,0 +1,45 @@
+"""MAP estimation (posterior mode) via Adam on the unconstrained space."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contexts import Context
+from repro.core.model import Model
+from repro.core.varinfo import TypedVarInfo
+from repro.optim import adam, apply_updates
+
+__all__ = ["MAP"]
+
+
+@dataclasses.dataclass
+class MAP:
+    lr: float = 0.05
+    num_steps: int = 500
+
+    def run(self, key, m: Model, ctx: Optional[Context] = None,
+            init_varinfo: Optional[TypedVarInfo] = None):
+        tvi = (init_varinfo if init_varinfo is not None
+               else m.typed_varinfo(key)).link()
+        logdensity = m.make_logdensity_fn(tvi, ctx=ctx)
+        opt = adam(self.lr)
+        # start at 0 in the unconstrained space (Stan-style init)
+        q = jnp.zeros_like(tvi.flat())
+        state = opt.init(q)
+
+        @jax.jit
+        def step(q, state):
+            loss, grad = jax.value_and_grad(lambda u: -logdensity(u))(q)
+            deltas, state = opt.update(grad, state, q)
+            return apply_updates(q, deltas), state, loss
+
+        losses = []
+        for _ in range(self.num_steps):
+            q, state, loss = step(q, state)
+            losses.append(float(loss))
+        estimate = tvi.replace_flat(q).invlink().as_dict()
+        return estimate, np.asarray(losses)

@@ -1,0 +1,86 @@
+"""SGLD / pSGLD — stochastic-gradient MCMC for minibatch models.
+
+This is where the paper's MiniBatchContext (§3.1) earns its keep at scale:
+the likelihood term of the log-joint is rescaled by N_total/batch so the
+stochastic gradient is unbiased, and Langevin noise turns SGD into a
+posterior sampler. Used by the large-scale Bayesian-LM training loop.
+
+``sgld_step`` is a pure function over (params pytree, minibatch, key) and
+composes with pjit/shard_map in the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contexts import MiniBatchContext
+from repro.core.model import Model
+
+__all__ = ["SGLD", "make_sgld_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SGLD:
+    """(preconditioned) stochastic-gradient Langevin dynamics."""
+
+    step_size: float = 1e-5
+    precondition: bool = True  # RMSProp-style preconditioning (pSGLD)
+    beta: float = 0.999
+    eps: float = 1e-5
+    temperature: float = 1.0  # 0.0 => plain SGD on the log-joint (MAP)
+
+    def init(self, params):
+        if not self.precondition:
+            return ()
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def step(self, key, params, grads, state):
+        """One SGLD update. grads = d logp / d params (ASCENT direction)."""
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        gleaves = treedef.flatten_up_to(grads)
+        keys = list(jax.random.split(key, len(leaves)))
+
+        if self.precondition:
+            vleaves = treedef.flatten_up_to(state)
+            new_v, new_p = [], []
+            for p, g, v, k in zip(leaves, gleaves, vleaves, keys):
+                g32 = g.astype(jnp.float32)
+                v = self.beta * v + (1.0 - self.beta) * jnp.square(g32)
+                m = 1.0 / (jnp.sqrt(v) + self.eps)
+                noise = jnp.sqrt(2.0 * self.step_size * m * self.temperature) \
+                    * jax.random.normal(k, p.shape, jnp.float32)
+                delta = self.step_size * m * g32 + noise
+                new_p.append((p.astype(jnp.float32) + delta).astype(p.dtype))
+                new_v.append(v)
+            return treedef.unflatten(new_p), treedef.unflatten(new_v)
+
+        new_p = []
+        for p, g, k in zip(leaves, gleaves, keys):
+            noise = jnp.sqrt(2.0 * self.step_size * self.temperature) \
+                * jax.random.normal(k, p.shape, jnp.float32)
+            delta = self.step_size * g.astype(jnp.float32) + noise
+            new_p.append((p.astype(jnp.float32) + delta).astype(p.dtype))
+        return treedef.unflatten(new_p), state
+
+
+def make_sgld_step(m: Model, scale: float, sgld: Optional[SGLD] = None,
+                   param_site: str = "params") -> Callable:
+    """Build a jit-able SGLD step over a model whose minibatch enters as
+    bound data. ``scale`` = N_total / batch_size (MiniBatchContext)."""
+    sgld = sgld if sgld is not None else SGLD()
+    ctx = MiniBatchContext(scale=scale)
+
+    def step(key, params, state, **batch):
+        def logjoint(p):
+            mm = m.bind(**batch)
+            return mm.logp_with_context({param_site: p}, ctx)
+
+        logp, grads = jax.value_and_grad(logjoint)(params)
+        params, state = sgld.step(key, params, grads, state)
+        return params, state, logp
+
+    return step

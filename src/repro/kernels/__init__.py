@@ -1,0 +1,46 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Three kernels (each: kernel.py with pl.pallas_call + BlockSpec VMEM tiling,
+ops.py jit'd wrapper, ref.py pure-jnp oracle):
+
+  flash_attention/  blockwise online-softmax GQA attention
+                    (causal, sliding-window, logit softcap, ring-buffer kv)
+  ssd_scan/         Mamba-2 SSD chunked scan with VMEM-resident state
+  fused_logpdf/     fused elementwise-logpdf + reduce for vectorised tilde
+                    statements (the paper's HMC hot loop)
+
+``use_fused_logpdf`` switches the PPL's Normal / BernoulliLogits /
+CategoricalLogits ``total_log_prob`` onto the fused kernel; it is OFF by
+default on CPU (interpret mode is for validation, not speed) and is the
+TPU-production path.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.kernels.flash_attention import flash_attention_gqa  # noqa: F401
+from repro.kernels.fused_logpdf import (  # noqa: F401
+    bernoulli_logits_logpmf_sum, categorical_logits_logpmf_sum,
+    normal_logpdf_sum)
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+
+_FUSED_LOGPDF = False
+
+
+def fused_logpdf_enabled() -> bool:
+    return _FUSED_LOGPDF
+
+
+def set_fused_logpdf(on: bool) -> None:
+    global _FUSED_LOGPDF
+    _FUSED_LOGPDF = bool(on)
+
+
+@contextlib.contextmanager
+def use_fused_logpdf(on: bool = True):
+    prev = _FUSED_LOGPDF
+    set_fused_logpdf(on)
+    try:
+        yield
+    finally:
+        set_fused_logpdf(prev)

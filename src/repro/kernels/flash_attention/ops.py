@@ -1,0 +1,123 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles layout (B,Sq,KV,G,hd) -> head-major (BH,Sq,hd), padding to
+block-aligned sequence lengths, position/validity plumbing, and the
+interpret-mode switch (CPU container: interpret=True; TPU: compiled).
+
+Differentiation: the pallas forward is wrapped in ``jax.custom_vjp``; the
+backward recomputes attention through the pure-jnp reference (flash-style
+recompute — no attention matrix is saved from the forward). A dedicated
+backward kernel is a perf follow-up; XLA fuses the recompute today.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhd
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention_gqa"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def flash_attention_gqa(q, k, v, *, q_positions, kv_positions,
+                        causal: bool = True, window: Optional[int] = None,
+                        cap: Optional[float] = None, kv_mask=None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: Optional[bool] = None):
+    """q: (B,Sq,KV,G,hd); k, v: (B,Sk,KV,hd) -> (B,Sq,KV,G,hd).
+
+    ``q_positions`` (B,Sq) / ``kv_positions`` (B,Sk) are absolute token
+    positions (any order — ring-buffer caches permute them). ``kv_mask``
+    (B,Sk) marks valid cache slots; padding is masked automatically.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    if kv_mask is None:
+        kv_mask = jnp.ones(kv_positions.shape, bool)
+    return _flash_vjp(q, k, v, q_positions.astype(jnp.int32),
+                      kv_positions.astype(jnp.int32), kv_mask,
+                      causal, window, cap, block_q, block_k, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
+def _flash_vjp(q, k, v, qp, kp, mask, causal, window, cap, bq, bk, interp):
+    return _fwd_impl(q, k, v, qp, kp, mask, causal=causal, window=window,
+                     cap=cap, block_q=bq, block_k=bk, interpret=interp)
+
+
+def _flash_fwd(q, k, v, qp, kp, mask, causal, window, cap, bq, bk, interp):
+    out = _fwd_impl(q, k, v, qp, kp, mask, causal=causal, window=window,
+                    cap=cap, block_q=bq, block_k=bk, interpret=interp)
+    return out, (q, k, v, qp, kp, mask)
+
+
+def _flash_bwd(causal, window, cap, bq, bk, interp, res, g):
+    q, k, v, qp, kp, mask = res
+
+    def f(q_, k_, v_):
+        return attention_ref(q_, k_, v_, q_positions=qp, kv_positions=kp,
+                             causal=causal, window=window, cap=cap,
+                             kv_mask=mask)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None
+
+
+_flash_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "cap", "block_q", "block_k",
+                     "interpret"))
+def _fwd_impl(q, k, v, q_positions, kv_positions, kv_mask, *,
+              causal: bool, window: Optional[int], cap: Optional[float],
+              block_q: int, block_k: int, interpret: bool):
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+
+    bq = min(block_q, _ceil_to(Sq, 8))
+    bk = min(block_k, _ceil_to(Sk, 8))
+    Sq_p = _ceil_to(Sq, bq)
+    Sk_p = _ceil_to(Sk, bk)
+
+    qp = q_positions
+    kp = kv_positions
+    valid = kv_mask.astype(jnp.int32)
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0), (0, 0)))
+        # padded q rows: position -big => causal masks every kv; sliced off
+        qp = jnp.pad(qp, ((0, 0), (0, Sq_p - Sq)),
+                     constant_values=-(2 ** 30))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+        # padded kv: invalid + position +big (masked by validity AND causal)
+        kp = jnp.pad(kp, ((0, 0), (0, Sk_p - Sk)), constant_values=2 ** 30)
+        valid = jnp.pad(valid, ((0, 0), (0, Sk_p - Sk)), constant_values=0)
+
+    # head-major layout: q (B*KV*G, Sq_p, hd); k/v (B*KV, Sk_p, hd)
+    q_bhd = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B * KV * G, Sq_p, hd)
+    k_bhd = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * KV, Sk_p, hd)
+    v_bhd = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * KV, Sk_p, hd)
+
+    out = flash_attention_bhd(
+        q_bhd, k_bhd, v_bhd, qp, kp, valid,
+        group=G, n_q_heads_per_batch=KV * G, causal=causal, window=window,
+        cap=cap, block_q=bq, block_k=bk, interpret=interpret)
+
+    out = out.reshape(B, KV, G, Sq_p, hd)[:, :, :, :Sq]
+    return jnp.transpose(out, (0, 3, 1, 2, 4))

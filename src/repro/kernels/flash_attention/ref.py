@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel (no pallas).
+
+Identical math to ``repro.nn.attention.attention_core``'s XLA path, kept
+dependency-free so kernel tests compare against an independent reference.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, q_positions, kv_positions, causal: bool,
+                  window: Optional[int], cap: Optional[float], kv_mask=None):
+    """q: (B,Sq,KV,G,hd); k, v: (B,Sk,KV,hd) -> (B,Sq,KV,G,hd).
+
+    All softmax arithmetic in f32 (matching the kernel's accumulators)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap is not None:
+        scores = cap * jnp.tanh(scores / cap)
+    mask = jnp.ones((), dtype=bool)
+    dq = q_positions[:, :, None]
+    dk = kv_positions[:, None, :]
+    if causal:
+        mask = mask & (dk <= dq)
+    if window is not None:
+        mask = mask & (dq - dk < window)
+    if kv_mask is not None:
+        mask = mask & kv_mask[:, None, :]
+    mask = jnp.broadcast_to(mask[:, None, None],
+                            scores.shape) if mask.ndim else mask
+    scores = jnp.where(mask, scores, -1e30)
+    # fully-masked rows -> uniform p over the masked row; zero them instead
+    probs = jax.nn.softmax(scores, axis=-1)
+    row_any = jnp.any(mask, axis=-1, keepdims=True) if mask.ndim else True
+    probs = jnp.where(row_any, probs, 0.0)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.fused_logpdf.ops import (  # noqa: F401
+    bernoulli_logits_logpmf_sum, categorical_logits_logpmf_sum,
+    normal_logpdf_sum)

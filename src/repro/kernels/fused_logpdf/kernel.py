@@ -1,0 +1,183 @@
+"""Pallas TPU kernels fusing elementwise log-density + reduction in VMEM.
+
+The hot loop of the paper's Table-1 benchmarks is a vectorised tilde
+statement: ``x .~ Normal(mu, sigma)`` lowers to an elementwise logpdf
+followed by a full-sum reduce, executed 4 leapfrog x 2000 iterations per
+chain. Unfused, XLA materialises the logpdf vector in HBM between the two
+stages; these kernels keep the elementwise values in VREGs and reduce into
+a VMEM accumulator tile, writing ONE scalar per grid pass — the memory
+traffic drops from 3N reads/writes to N reads.
+
+Layout: inputs are flattened and padded to (R, 128) tiles; the grid walks
+row-blocks sequentially, accumulating partial sums in a VMEM (8, 128)
+accumulator that is reduced to the (1, 1) output on the last step. Padding
+is masked with an iota test against the true length (static at trace time).
+
+Three variants cover the paper's benchmark suite:
+  normal:          x ~ Normal(mu, sigma)            (gaussian_10k, gdemo, ...)
+  bernoulli_logit: y ~ BernoulliLogits(l)           (logreg)
+  categorical:     y ~ CategoricalLogits(logits)    (naive bayes, HMM, LDA)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUB = 8
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def _mask_block(i, block_rows, n_valid):
+    """(block_rows, LANE) bool mask of in-range elements for row-block i."""
+    row0 = i * block_rows
+    rr = jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANE), 0)
+    cc = jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANE), 1)
+    flat = (row0 + rr) * LANE + cc
+    return flat < n_valid
+
+
+# ---------------------------------------------------------------------------
+# Normal(mu, sigma) — elementwise params (pre-broadcast by ops.py)
+# ---------------------------------------------------------------------------
+def _normal_kernel(x_ref, mu_ref, sig_ref, o_ref, acc_ref, *, n_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    sig = sig_ref[...].astype(jnp.float32)
+    z = (x - mu) / sig
+    lp = -0.5 * z * z - jnp.log(sig) - _HALF_LOG_2PI
+    lp = jnp.where(_mask_block(i, x.shape[0], n_valid), lp, 0.0)
+    # per-lane partial sums into the (SUB, LANE) accumulator tile
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+def _bernoulli_logit_kernel(l_ref, y_ref, o_ref, acc_ref, *, n_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    logit = l_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    # y*log sig(l) + (1-y)*log sig(-l) = -softplus(-l) - (1-y)*l  (stable)
+    lp = -jnp.logaddexp(0.0, -logit) - (1.0 - y) * logit
+    lp = jnp.where(_mask_block(i, logit.shape[0], n_valid), lp, 0.0)
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# Categorical cross-entropy: logits (N, C), labels (N,)
+# ---------------------------------------------------------------------------
+def _categorical_kernel(l_ref, y_ref, o_ref, acc_ref, *, n_valid: int,
+                        c_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    logits = l_ref[...].astype(jnp.float32)        # (bn, Cp)
+    y = y_ref[...]                                 # (bn, 1) int32
+    bn, cp = logits.shape
+    cc = jax.lax.broadcasted_iota(jnp.int32, (bn, cp), 1)
+    cmask = cc < c_valid
+    logits = jnp.where(cmask, logits, -1e30)
+    m = jnp.max(logits, axis=1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=1, keepdims=True)) + m
+    picked = jnp.sum(jnp.where(cc == y, logits, 0.0), axis=1, keepdims=True)
+    lp = picked - lse                              # (bn, 1)
+    rr = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    lp = jnp.where(rr + i * bn < n_valid, lp, 0.0)
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, 1), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+def _reduce_call(kernel, n_inputs: int, rows: int, block_rows: int,
+                 lanes: int, acc_shape, dtypes, interpret: bool, name: str):
+    grid = (rows // block_rows,)
+    in_specs = [pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+                for _ in range(n_inputs)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM(acc_shape, jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name=name,
+    )
+
+
+def normal_sum_2d(x, mu, sig, n_valid: int, block_rows: int,
+                  interpret: bool):
+    rows = x.shape[0]
+    kern = functools.partial(_normal_kernel, n_valid=n_valid)
+    call = _reduce_call(kern, 3, rows, block_rows, LANE, (SUB, LANE),
+                        None, interpret, "fused_normal_logpdf")
+    return call(x, mu, sig)[0, 0]
+
+
+def bernoulli_logit_sum_2d(logits, y, n_valid: int, block_rows: int,
+                           interpret: bool):
+    rows = logits.shape[0]
+    kern = functools.partial(_bernoulli_logit_kernel, n_valid=n_valid)
+    call = _reduce_call(kern, 2, rows, block_rows, LANE, (SUB, LANE),
+                        None, interpret, "fused_bernoulli_logpdf")
+    return call(logits, y)[0, 0]
+
+
+def categorical_sum_2d(logits, labels, n_valid: int, c_valid: int,
+                       block_rows: int, interpret: bool):
+    rows, cp = logits.shape
+    grid = (rows // block_rows,)
+    kern = functools.partial(_categorical_kernel, n_valid=n_valid,
+                             c_valid=c_valid)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((SUB, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="fused_categorical_logpdf",
+    )(logits, labels)[0, 0]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the fused logpdf kernels."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def normal_logpdf_sum_ref(x, loc, scale):
+    x = jnp.asarray(x, jnp.float32)
+    loc = jnp.asarray(loc, jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    z = (x - loc) / scale
+    return jnp.sum(-0.5 * z * z - jnp.log(scale) - _HALF_LOG_2PI)
+
+
+def bernoulli_logits_logpmf_sum_ref(logits, y):
+    logits = jnp.asarray(logits, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    return jnp.sum(-jnp.logaddexp(0.0, -logits) - (1.0 - y) * logits)
+
+
+def categorical_logits_logpmf_sum_ref(logits, labels):
+    C = logits.shape[-1]
+    logits = jnp.asarray(logits, jnp.float32).reshape(-1, C)
+    labels = jnp.asarray(labels, jnp.int32).reshape(-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=-1))

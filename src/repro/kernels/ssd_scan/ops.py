@@ -1,0 +1,71 @@
+"""jit'd public wrapper for the SSD scan kernel (padding + interpret switch).
+
+Forward runs the Pallas kernel; backward recomputes through the pure-jnp
+chunked reference (scan-structured, so XLA's remat handles memory)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bh
+
+__all__ = ["ssd_scan"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Chunked SSD scan. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n) -> y.
+
+    Sequence is padded to a chunk multiple with dt=0 (zero state update,
+    zero dA decay contribution); the pad region is sliced off.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _ssd_vjp(x, dt, A, B, C, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_vjp(x, dt, A, B, C, chunk, interpret):
+    return _ssd_fwd_impl(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk, interpret):
+    y = _ssd_fwd_impl(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return y, (x, dt, A, B, C)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    x, dt, A, B, C = res
+
+    def f(x_, dt_, A_, B_, C_):
+        return ssd_scan_ref(x_, dt_, A_, B_, C_, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, A, B, C)
+    return vjp(g)
+
+
+_ssd_vjp.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_fwd_impl(x, dt, A, B, C, *, chunk: int, interpret: bool):
+    b, s, h, p = x.shape
+    g = B.shape[2]
+    s_p = ((s + chunk - 1) // chunk) * chunk
+    if s_p != s:
+        pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        B = jnp.pad(B, pad)
+        C = jnp.pad(C, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, s_p - s), (0, 0)))
+    y = ssd_scan_bh(x, dt, A, B, C, chunk=chunk, n_groups=g,
+                    interpret=interpret)
+    return y[:, :s]

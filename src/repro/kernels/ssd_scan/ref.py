@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD scan kernel: re-exports the nn reference.
+
+``repro.nn.ssm.ssd_chunked_ref`` is the framework's XLA execution path and
+serves as the independent oracle for the Pallas kernel (the kernel never
+calls it; tests assert allclose between the two).
+"""
+import jax.numpy as jnp
+
+from repro.nn.ssm import ssd_chunked_ref
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 128):
+    s = x.shape[1]
+    s_p = ((s + chunk - 1) // chunk) * chunk
+    if s_p != s:
+        pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        B = jnp.pad(B, pad)
+        C = jnp.pad(C, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, s_p - s), (0, 0)))
+    return ssd_chunked_ref(x, dt, A, B, C, chunk=chunk)[:, :s]

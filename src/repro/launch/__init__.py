@@ -1,0 +1,3 @@
+# repro.launch — mesh construction, AOT dry-run, train/serve drivers.
+# NOTE: import of this package never touches jax device state; meshes are
+# built by FUNCTIONS so the dry-run can set XLA_FLAGS first.

@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first backend init): the dry-run — and only the dry-run — runs
+with 512 placeholder CPU devices so ``jax.make_mesh`` can build the
+production meshes (16x16 single-pod, 2x16x16 multi-pod).
+
+Per cell: ``jax.jit(step).lower(**input_specs).compile()`` must succeed;
+``memory_analysis()`` proves the cell fits, ``cost_analysis()`` +
+collective parsing feed §Roofline. Results stream to a JSONL file so an
+interrupted sweep resumes where it stopped.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+from repro import configs
+from repro.launch.lowering import lower_cell  # noqa: E402  (after XLA_FLAGS)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_path: str,
+             train_fsdp=None, mode: str = "map", unroll: bool = False) -> bool:
+    t0 = time.time()
+    tag = f"{arch}/{shape}/{'multi' if multi_pod else 'single'}"
+    skip = configs.skip_reason(arch, shape)
+    if skip is not None:
+        rec = {"cell": tag, "status": "skipped", "reason": skip}
+        print(f"[dryrun] SKIP {tag}: {skip}", flush=True)
+    else:
+        try:
+            report, _ = lower_cell(arch, shape, multi_pod=multi_pod,
+                                   train_fsdp=train_fsdp, mode=mode,
+                                   unroll=unroll)
+            rec = {"cell": tag, "status": "ok",
+                   "compile_s": round(time.time() - t0, 1),
+                   **report.to_json()}
+            print(f"[dryrun] OK   {tag}: "
+                  f"{report.flops_per_device / 1e12:.2f} TF/dev, "
+                  f"args {report.arg_bytes / 1e9:.2f} GB/dev, "
+                  f"temp {report.temp_bytes / 1e9:.2f} GB/dev, "
+                  f"colls {sum(report.collectives.values()) / 1e6:.1f} MB "
+                  f"({rec['compile_s']}s)", flush=True)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"cell": tag, "status": "error", "error": repr(e),
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] FAIL {tag}: {e!r}", flush=True)
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec["status"] != "error"
+
+
+def done_cells(out_path: str):
+    done = set()
+    if out_path and os.path.exists(out_path):
+        with open(out_path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if rec.get("status") in ("ok", "skipped"):
+                    done.add(rec["cell"])
+    return done
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--out", default="")
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--mode", default="map", choices=("map", "sgld"))
+    p.add_argument("--unroll", action="store_true",
+                   help="unrolled layer stacks (accurate cost_analysis)")
+    args = p.parse_args(argv)
+
+    cells = []
+    if args.all:
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        for arch, shape in configs.cells(include_skipped=True):
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch and --shape required without --all")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    done = done_cells(args.out) if args.resume else set()
+    ok = True
+    for arch, shape, mp in cells:
+        tag = f"{arch}/{shape}/{'multi' if mp else 'single'}"
+        if tag in done:
+            print(f"[dryrun] done {tag} (resume)", flush=True)
+            continue
+        ok = run_cell(arch, shape, mp, args.out, mode=args.mode,
+                      unroll=args.unroll) and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

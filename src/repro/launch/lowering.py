@@ -1,0 +1,480 @@
+"""Per-cell AOT lowering: build step fn + shardings, lower, compile, analyse.
+
+One "cell" = (architecture x input shape x mesh). ``lower_cell`` returns
+the compiled executable plus the analysis record consumed by the roofline
+(§Roofline): memory stats, per-device HLO FLOPs/bytes from
+``cost_analysis()``, and per-collective bytes parsed from the post-SPMD
+HLO text (collective bytes are NOT in cost_analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from collections import defaultdict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro import configs, sharding
+from repro.launch import mesh as mesh_lib
+from repro.models import bayes_lm
+from repro.nn import lm
+
+__all__ = ["lower_cell", "CellReport", "collective_bytes", "cache_shardings",
+           "estimate_n_params", "build_train_args", "build_serve_args"]
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """{collective-op: summed result bytes} over the post-SPMD module.
+
+    Result-shape bytes are the per-device payload actually moved for
+    all-gather/all-to-all/permute; for all-reduce/reduce-scatter they are
+    the canonical 'bytes on the wire per device per pass' proxy used by
+    roofline calculators (ring transfers ~2x for AR; reported raw here,
+    the roofline applies the algorithm factor).
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for type_str, op in _OP_RE.findall(hlo_text):
+        out[op] += _shape_bytes(type_str)
+    return dict(out)
+
+
+# XLA's cost_analysis() is unusable for the roofline on the CPU backend:
+# (1) while-loop bodies are counted ONCE (lax.scan undercounts by depth),
+# (2) reductions lowered as reduce-window count window*outputs "flops" and
+#     bytes (a 4096-seq softmax inflates 10-100x).
+# So the roofline parses the post-SPMD HLO directly:
+#   * dot_flops  — exact MXU work: 2 * prod(result dims) * contraction
+#     size, summed over every dot in every computation (fusion internals
+#     included — a dot is MXU work wherever it lives).
+#   * traffic    — HBM bytes: sum of TOP-LEVEL (entry) instruction result
+#     bytes, doubled (every buffer is written once and read ~once).
+#     Fusion-internal values live in registers and are excluded, which is
+#     exactly the fusion memory model.
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+_ENTRY_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([a-z][\w\-]*)")
+# buffer-aliasing / bookkeeping ops: no HBM data movement
+_NO_TRAFFIC_OPS = {"get-tuple-element", "tuple", "bitcast", "parameter",
+                   "constant", "after-all", "partition-id", "replica-id"}
+_DOT_RE = re.compile(
+    r"(%[\w.\-]+) = [a-z0-9]+\[([0-9,]*)\][^\n]* dot\((%[\w.\-]+), "
+    r"(%[\w.\-]+)\), lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(
+    r"while\(.*body=%?([\w.\-]+).*?known_trip_count.*?\"n\":\"(\d+)\"")
+
+
+def _split_computations(hlo_text: str):
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START.match(line)
+        # computation headers: `%name (args...) -> type {` at column 0
+        if m and "->" in line and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def hlo_metrics(hlo_text: str) -> Dict[str, float]:
+    """HLO-parsed dot flops + loop-level HBM traffic (see block comment).
+
+    Handles while loops (e.g. microbatch-accumulation scans) by scaling
+    body contributions by the XLA-annotated ``known_trip_count``; fusion
+    computations contribute their dots to the caller but their internals
+    never count as traffic (register-resident)."""
+    shape_of: Dict[str, list] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, _, dims = m.groups()
+            shape_of[name] = ([int(x) for x in dims.split(",")]
+                              if dims else [])
+
+    def dot_flops_of(line: str) -> float:
+        m = _DOT_RE.search(line)
+        if not m:
+            return 0.0
+        _, rdims, lhs, _, lcd = m.groups()
+        rd = [int(x) for x in rdims.split(",")] if rdims else []
+        ld = shape_of.get(lhs, [])
+        c = 1
+        for i in (int(x) for x in lcd.split(",") if x):
+            c *= ld[i] if i < len(ld) else 1
+        f = 2.0 * c
+        for d in rd:
+            f *= d
+        return f
+
+    comps = _split_computations(hlo_text)
+    entry_name = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    if m:
+        entry_name = m.group(1)
+
+    from functools import lru_cache
+
+    def _merge(dst, src, scale=1.0):
+        for k, v in src.items():
+            dst[k] = dst.get(k, 0.0) + v * scale
+        return dst
+
+    def analyze(name: str, count_traffic: bool, _seen=()):  # DFS w/ cycles
+        if name not in comps or name in _seen:
+            return 0.0, 0.0, {}
+        flops = 0.0
+        traffic = 0.0
+        colls: Dict[str, float] = {}
+        for line in comps[name]:
+            flops += dot_flops_of(line)
+            cm_op = _OP_RE.match(line)
+            if cm_op:
+                _merge(colls, {cm_op.group(2): _shape_bytes(cm_op.group(1))})
+            wm = _WHILE_RE.search(line)
+            if wm:
+                body, trip = wm.group(1), float(wm.group(2))
+                bf, bt, bc = analyze(body, True, _seen + (name,))
+                flops += bf * trip
+                traffic += bt * trip
+                _merge(colls, bc, trip)
+                continue
+            if " while(" in line:  # unknown trip count: count once
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    bf, bt, bc = analyze(cm.group(1), True, _seen + (name,))
+                    flops += bf
+                    traffic += bt
+                    _merge(colls, bc)
+                continue
+            if " fusion(" in line or " call(" in line:
+                cm = _CALLS_RE.search(line)
+                if cm:  # dots inside fusions count; traffic does not
+                    bf, _, _ = analyze(cm.group(1), False, _seen + (name,))
+                    flops += bf
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    bf, bt, bc = analyze(b.strip().lstrip("%"),
+                                         count_traffic, _seen + (name,))
+                    flops += bf
+                    traffic += bt
+                    _merge(colls, bc)
+            if count_traffic:
+                em = _ENTRY_LINE.match(line)
+                if em and em.group(2) not in _NO_TRAFFIC_OPS:
+                    traffic += _shape_bytes(em.group(1))
+                elif (em and em.group(2) == "parameter"
+                      and name == entry_name):
+                    traffic += _shape_bytes(em.group(1))  # real input reads
+        return flops, traffic, colls
+
+    if entry_name is None:
+        return {"dot_flops": 0.0, "traffic_bytes": 0.0, "collectives": {}}
+    flops, traffic, colls = analyze(entry_name, True)
+    return {"dot_flops": flops, "traffic_bytes": 2.0 * traffic,
+            "collectives": {k: int(v) for k, v in colls.items()}}
+
+
+# ---------------------------------------------------------------------------
+# cache shardings
+# ---------------------------------------------------------------------------
+_CACHE_SPECS = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "pos": ("batch",),
+    "ssm": ("batch", "heads", None, None),
+    "conv": ("batch", None, "mlp"),
+    "h": ("batch", "mlp"),
+}
+
+
+def _cache_spec_for(path, shape, rules: sharding.Rules) -> PartitionSpec:
+    keys = [k.key for k in path if hasattr(k, "key")]
+    name = keys[-1] if keys else ""
+    base = _CACHE_SPECS.get(name)
+    ndim = len(shape)
+    if base is None or ndim < len(base):
+        return rules.spec(*([None] * ndim))
+    logical = [None] * (ndim - len(base)) + list(base)
+    fitted = sharding.fit_spec(rules.spec(*logical), shape, rules.mesh)
+    # deconflict kv_heads vs kv_seq both mapping to the same mesh axis:
+    # prefer head sharding (zero-comm attention); fall back to length
+    # sharding (flash-decoding) when heads were dropped by divisibility.
+    if base in (_CACHE_SPECS["k"], _CACHE_SPECS["c_kv"]):
+        off = ndim - len(base)
+        seq_i = off + 1
+        entries = list(fitted)
+        seen = [e for i, e in enumerate(entries)
+                if e is not None and i != seq_i]
+        flat = set()
+        for e in seen:
+            flat.update((e,) if isinstance(e, str) else e)
+        if entries[seq_i] is not None:
+            se = entries[seq_i]
+            se_set = set((se,) if isinstance(se, str) else se)
+            if se_set & flat:
+                entries[seq_i] = None
+        fitted = PartitionSpec(*entries)
+    return fitted
+
+
+def cache_shardings(mesh: Mesh, cache_shapes, rules: sharding.Rules):
+    r = rules.with_mesh(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: NamedSharding(
+            mesh, _cache_spec_for(p, tuple(leaf.shape), r)),
+        cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+def estimate_n_params(cfg: lm.ArchConfig) -> int:
+    shapes = jax.eval_shape(functools.partial(lm.init_params, cfg))
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(shapes))
+
+
+def _batch_shardings(mesh: Mesh, batch_specs, rules: sharding.Rules):
+    r = rules.with_mesh(mesh)
+    return {
+        k: NamedSharding(mesh, sharding.fit_spec(
+            r.spec("batch", *([None] * (len(v.shape) - 1))),
+            tuple(v.shape), mesh))
+        for k, v in batch_specs.items()
+    }
+
+
+def build_train_args(arch: str, shape: str, mesh: Mesh,
+                     rules: sharding.Rules, *, microbatch: int = 1,
+                     mode: str = "map",
+                     cfg: Optional[lm.ArchConfig] = None):
+    """(step_fn, arg_shapes, in_shardings, out_shardings) for a train cell."""
+    cfg = cfg if cfg is not None else configs.get_config(arch)
+    spec = configs.SHAPES[shape]
+    init_fn, step_fn = bayes_lm.make_train_step(
+        cfg, total_tokens=1e12, mode=mode, microbatch=microbatch)
+
+    params_shapes = jax.eval_shape(functools.partial(lm.init_params, cfg))
+    state_shapes = jax.eval_shape(init_fn, params_shapes)
+    batch_specs = configs.input_specs(arch, shape)
+
+    state_sh = sharding.param_shardings(mesh, state_shapes, rules)
+    batch_sh = _batch_shardings(mesh, batch_specs, rules)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    args = (state_shapes, key_spec, batch_specs)
+    in_sh = (state_sh, repl, batch_sh)
+    out_sh = (state_sh, {"logjoint": repl, "nll": repl, "grad_norm": repl})
+    return step_fn, args, in_sh, out_sh
+
+
+def build_serve_args(arch: str, shape: str, mesh: Mesh,
+                     rules: sharding.Rules,
+                     cfg: Optional[lm.ArchConfig] = None):
+    """decode / prefill cell assembly. Returns same tuple as train."""
+    cfg = cfg if cfg is not None else configs.get_config(arch)
+    spec = configs.SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    params_shapes = jax.eval_shape(functools.partial(lm.init_params, cfg))
+    params_sh = sharding.param_shardings(mesh, params_shapes, rules)
+    repl = NamedSharding(mesh, PartitionSpec())
+    r = rules.with_mesh(mesh)
+
+    # VLM prefix tokens occupy cache slots ahead of the text tokens
+    max_len = S + (cfg.n_prefix if (cfg.n_prefix and cfg.enc_layers == 0)
+                   else 0)
+    cache_shapes = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, B, max_len))
+    cache_sh = cache_shardings(mesh, cache_shapes, rules)
+
+    if spec.kind == "prefill":
+        prefill_fn = bayes_lm.make_prefill_step(cfg)
+        batch_specs = configs.input_specs(arch, shape)
+        extras = {k: v for k, v in batch_specs.items() if k != "tokens"}
+        batch_sh = _batch_shardings(mesh, batch_specs, rules)
+
+        def fn(params, tokens, cache, extras):
+            return prefill_fn(params, tokens, cache, **extras)
+
+        args = (params_shapes, batch_specs["tokens"], cache_shapes, extras)
+        in_sh = (params_sh, batch_sh["tokens"], cache_sh,
+                 {k: batch_sh[k] for k in extras})
+        spec_logits = sharding.fit_spec(
+            r.spec("batch", None, "vocab"),
+            (B, 1, cfg.vocab), mesh)
+        logits_sh = NamedSharding(mesh, spec_logits)
+        out_sh = (logits_sh, cache_sh)
+        return fn, args, in_sh, out_sh
+
+    # decode
+    decode_fn = bayes_lm.make_serve_step(cfg)
+    io_specs = configs.input_specs(arch, shape)
+    tok_sh = NamedSharding(mesh, r.spec("batch", None))
+    pos_sh = NamedSharding(mesh, r.spec("batch"))
+
+    memory_kv = None
+    mem_sh = None
+    if cfg.enc_layers > 0:
+        kv_shape = jax.eval_shape(
+            lambda p, m: bayes_lm.lm.make_cross_kv(cfg, p, m),
+            params_shapes,
+            jax.ShapeDtypeStruct((B, cfg.n_prefix, cfg.d_model), cfg.dtype))
+        memory_kv = kv_shape
+        mspec = NamedSharding(
+            mesh, r.spec(None, "batch", None, "kv_heads", None))
+        mem_sh = {"k": mspec, "v": mspec}
+
+    def fn(params, token, cache, pos, memory_kv=None):
+        return decode_fn(params, token, cache, pos, key=None,
+                         memory_kv=memory_kv)
+
+    args = (params_shapes, io_specs["token"], cache_shapes, io_specs["pos"],
+            memory_kv)
+    in_sh = (params_sh, tok_sh, cache_sh, pos_sh, mem_sh)
+    logits_sh = NamedSharding(mesh, sharding.fit_spec(
+        r.spec("batch", None, "vocab"), (B, 1, cfg.vocab), mesh))
+    out_sh = (tok_sh, logits_sh, cache_sh)
+    return fn, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# lower + compile + analyse
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh_desc: str
+    kind: str
+    n_params: int
+    flops_per_device: float     # HLO-parsed dot flops (MXU work)
+    bytes_per_device: float     # HLO-parsed entry-level traffic
+    collectives: Dict[str, int]
+    arg_bytes: int
+    temp_bytes: int
+    output_bytes: int
+    fsdp: bool
+    ca_flops: float = 0.0       # raw cost_analysis (while bodies counted
+    ca_bytes: float = 0.0       # once; reduce-window inflated — see doc)
+    unrolled: bool = False
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               mode: str = "map", microbatch: int = 1,
+               train_fsdp: Optional[bool] = None,
+               cfg: Optional[lm.ArchConfig] = None,
+               keep_compiled: bool = False, unroll: bool = False,
+               rules_variant: Optional[str] = None):
+    """Lower + compile one cell; returns (CellReport, compiled|None).
+
+    ``unroll=True`` lowers with unrolled layer stacks: slower compile,
+    but XLA's cost_analysis counts while-loop bodies once, so the
+    roofline pass needs the full HLO. ``rules_variant`` selects a §Perf
+    sharding scheme (e.g. "dp_zero")."""
+    cfg = cfg if cfg is not None else configs.get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    spec = configs.SHAPES[shape]
+    kind = "long" if shape == "long_500k" else spec.kind
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_params = estimate_n_params(cfg)
+    model_axis = mesh.shape["model"]
+    rules = mesh_lib.rules_for_cell(kind, n_params=n_params,
+                                    model_axis=model_axis,
+                                    train_fsdp=train_fsdp,
+                                    variant=rules_variant).with_mesh(mesh)
+
+    with sharding.use_rules(rules), mesh:
+        if spec.kind == "train":
+            fn, args, in_sh, out_sh = build_train_args(
+                arch, shape, mesh, rules, microbatch=microbatch, mode=mode,
+                cfg=cfg)
+            donate = (0,)
+        else:
+            fn, args, in_sh, out_sh = build_serve_args(
+                arch, shape, mesh, rules, cfg=cfg)
+            donate = (2,) if spec.kind == "decode" else ()
+
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    hm = hlo_metrics(txt)
+    # trip-count-aware collective accounting (falls back to the flat scan)
+    colls = hm["collectives"] or collective_bytes(txt)
+    report = CellReport(
+        arch=arch, shape=shape,
+        mesh_desc="x".join(str(s) for s in
+                           (mesh_lib.MULTIPOD_SHAPE if multi_pod
+                            else mesh_lib.POD_SHAPE)),
+        kind=spec.kind,
+        n_params=n_params,
+        flops_per_device=hm["dot_flops"],
+        bytes_per_device=hm["traffic_bytes"],
+        collectives=colls,
+        arg_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+        temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+        output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+        fsdp=bool(rules.fsdp),
+        ca_flops=float(ca.get("flops", 0.0)),
+        ca_bytes=float(ca.get("bytes accessed", 0.0)),
+        unrolled=not cfg.scan_layers,
+    )
+    return report, (compiled if keep_compiled else None)

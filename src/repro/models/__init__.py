@@ -1,0 +1,4 @@
+"""repro.models — paper benchmark models + LM probabilistic wrappers."""
+from repro.models.paper_suite import MODEL_NAMES, PaperModel, build
+
+__all__ = ["MODEL_NAMES", "PaperModel", "build"]

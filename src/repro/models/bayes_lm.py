@@ -1,0 +1,202 @@
+"""The assigned LM architectures as DynamicPPL models (DESIGN.md §4).
+
+The transformer backbone runs INSIDE an ``@model``: parameters carry a
+Gaussian prior (``prior_factor`` — a prior-weighted tilde contribution for
+pytree-valued weights), the token likelihood is an ``observe`` site, and
+minibatch training uses ``MiniBatchContext(scale=N_total/B)`` — the
+paper's §3.1 stochastic-gradient scaling at production scale:
+
+    log p(theta | D) ≈ log p(theta) + (N/B) * log p(batch | theta)
+
+``make_train_step`` returns a pure pjit-able step:
+  * mode="map"  — MAP-Adam on the scaled log-joint (the production
+                  pretraining path; weight decay IS the Gaussian prior).
+  * mode="sgld" — preconditioned SGLD: posterior SAMPLING at scale.
+
+``make_serve_step`` returns the posterior-predictive decode (paper §3.5's
+``prob"y* | chain"`` as a compiled function with a KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.contexts import MiniBatchContext
+from repro.core.model import model
+from repro.core.primitives import observe, prior_factor
+from repro.dists import Categorical
+from repro.infer.sgld import SGLD
+from repro.nn import lm
+from repro.sharding import constrain
+
+__all__ = ["make_lm_model", "make_train_step", "make_serve_step",
+           "make_prefill_step", "tree_normal_logprior", "TrainState"]
+
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def tree_normal_logprior(params, sigma: float = 1.0) -> jax.Array:
+    """sum over leaves of Normal(0, sigma).log_prob — the weight prior."""
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(params):
+        x = leaf.astype(jnp.float32)
+        total += jnp.sum(-0.5 * jnp.square(x / sigma)) \
+            - x.size * (math.log(sigma) + _HALF_LOG_2PI)
+    return total
+
+
+def make_lm_model(cfg: lm.ArchConfig, prior_sigma: float = 1.0):
+    """ModelGen: lm_bayes(tokens, labels, params, prefix_embeds, enc_frames).
+
+    The backbone is deterministic inside the model; ``params`` enter as
+    bound data with their prior via ``prior_factor`` (pytree-valued RV),
+    and the tokens are one vectorised Categorical observe site.
+    """
+
+    @model
+    def lm_bayes(tokens, labels, params, prefix_embeds=None, enc_frames=None):
+        prior_factor("params", tree_normal_logprior(params, prior_sigma))
+        logits = lm.forward_train(cfg, params, tokens,
+                                  prefix_embeds=prefix_embeds,
+                                  enc_frames=enc_frames)
+        V = logits.shape[-1]
+        observe("tokens",
+                Categorical(logits=logits.reshape(-1, V).astype(jnp.float32)),
+                labels.reshape(-1))
+        return logits
+
+    return lm_bayes
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def make_train_step(cfg: lm.ArchConfig, *, total_tokens: float,
+                    mode: str = "map", learning_rate: float = 3e-4,
+                    prior_sigma: float = 1.0, grad_clip: float = 1.0,
+                    microbatch: int = 1,
+                    sgld: Optional[SGLD] = None
+                    ) -> Tuple[Callable, Callable]:
+    """(init_fn, step_fn) for distributed Bayesian-LM training.
+
+    step_fn(state, key, batch) -> (state, metrics); pure, donation-safe.
+    ``microbatch`` > 1 splits the per-device batch into sequential
+    micro-steps with gradient accumulation (same numerics, less memory).
+    """
+    m_gen = make_lm_model(cfg, prior_sigma)
+    opt = optim.adamw(learning_rate) if mode == "map" else None
+    sgld = sgld if sgld is not None else SGLD(step_size=1e-6)
+
+    def init_fn(params) -> TrainState:
+        opt_state = opt.init(params) if opt is not None else sgld.init(params)
+        return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
+
+    def logjoint(params, batch):
+        tokens = batch["tokens"]
+        n_batch_tokens = tokens.shape[0] * tokens.shape[1]
+        ctx = MiniBatchContext(scale=total_tokens / n_batch_tokens)
+        mdl = m_gen(tokens=tokens, labels=batch["labels"], params=params,
+                    prefix_embeds=batch.get("prefix_embeds"),
+                    enc_frames=batch.get("enc_frames"))
+        lp = mdl.logp_with_context({}, ctx)
+        # per-token NLL for logging (unscaled likelihood)
+        nll = -(lp - tree_normal_logprior(params, prior_sigma)) \
+            / ctx.scale / n_batch_tokens
+        return lp, nll
+
+    def grad_fn(params, batch):
+        (lp, nll), grads = jax.value_and_grad(logjoint, has_aux=True)(
+            params, batch)
+        return lp, nll, grads
+
+    def accum_grads(params, batch):
+        if microbatch <= 1:
+            return grad_fn(params, batch)
+        # split the batch leading dim into microbatches, scan-accumulate
+        def resplit(x):
+            b = x.shape[0]
+            return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+        mb = {k: resplit(v) for k, v in batch.items() if v is not None}
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mbatch):
+            lp_a, nll_a, g_a = carry
+            lp, nll, g = grad_fn(params, mbatch)
+            g_a = jax.tree_util.tree_map(
+                lambda a, b_: a + b_.astype(jnp.float32), g_a, g)
+            return (lp_a + lp, nll_a + nll, g_a), None
+
+        (lp, nll, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(()), zeros), mb)
+        scale = 1.0 / microbatch
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return lp * scale, nll * scale, grads
+
+    def step_fn(state: TrainState, key, batch):
+        batch = {k: constrain(v, "batch", *([None] * (v.ndim - 1)))
+                 for k, v in batch.items() if v is not None}
+        lp, nll, grads = accum_grads(state.params, batch)
+        if mode == "map":
+            # Adam DESCENDS a loss; pass -grad(logjoint)
+            neg = jax.tree_util.tree_map(lambda g: -g, grads)
+            neg, gnorm = optim.clip_by_global_norm(neg, grad_clip)
+            deltas, opt_state = opt.update(neg, state.opt_state, state.params)
+            params = optim.apply_updates(state.params, deltas)
+        else:
+            grads, gnorm = optim.clip_by_global_norm(grads, grad_clip * 1e9)
+            params, opt_state = sgld.step(key, state.params, grads,
+                                          state.opt_state)
+        new_state = TrainState(params, opt_state, state.step + 1)
+        metrics = {"logjoint": lp, "nll": nll, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return init_fn, step_fn
+
+
+def make_serve_step(cfg: lm.ArchConfig, temperature: float = 0.0) -> Callable:
+    """decode_fn(params, token, cache, pos, key, memory_kv) ->
+    (next_token, logits, new_cache) — one posterior-predictive token."""
+
+    def decode_fn(params, token, cache, pos, key=None, memory_kv=None):
+        logits, new_cache = lm.decode_step(cfg, params, token, cache, pos,
+                                           memory_kv=memory_kv)
+        lg = logits[:, -1, :].astype(jnp.float32)
+        if temperature and temperature > 0.0:
+            nxt = jax.random.categorical(key, lg / temperature)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, new_cache
+
+    return decode_fn
+
+
+def make_prefill_step(cfg: lm.ArchConfig) -> Callable:
+    def prefill_fn(params, tokens, cache, prefix_embeds=None,
+                   enc_frames=None):
+        return lm.prefill(cfg, params, tokens, cache,
+                          prefix_embeds=prefix_embeds, enc_frames=enc_frames)
+
+    return prefill_fn

@@ -1,0 +1,277 @@
+"""Attention variants: GQA/MQA (+ sliding window, softcap), MLA, cross-attn.
+
+All functions are pure: ``params`` is a dict of arrays, caches are dicts of
+arrays, shapes are (batch, seq, ...). Causal masking is position-based so
+the same code path serves training (full seq), prefill, and single-token
+decode with a KV cache.
+
+The score/softmax/PV core routes through either the XLA einsum path or the
+Pallas flash-attention kernel (``impl="flash"``), selected per-call.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import Initializer, apply_rope, rope, softcap
+from repro.sharding import constrain
+
+__all__ = [
+    "init_gqa_params", "gqa_attention", "init_mla_params", "mla_attention",
+    "init_cross_params", "cross_attention", "make_kv_cache", "make_mla_cache",
+    "attention_core",
+]
+
+
+# ---------------------------------------------------------------------------
+# core: blocked or dense attention over (B, S_q, KV, G, hd) x (B, S_k, KV, hd)
+# ---------------------------------------------------------------------------
+def attention_core(q, k, v, *, q_positions, kv_positions, causal: bool,
+                   window: Optional[int], cap: Optional[float],
+                   impl: str = "xla", kv_mask=None):
+    """q: (B,Sq,KV,G,hd); k,v: (B,Sk,KV,hd). Returns (B,Sq,KV,G,hd)."""
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention_gqa(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, window=window, cap=cap, kv_mask=kv_mask)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap) if cap is not None else scores
+    mask = None
+    dq = q_positions[:, :, None]          # (B,Sq,1)
+    dk = kv_positions[:, None, :]         # (B,1,Sk)
+
+    def _and(m, term):
+        return term if m is None else (m & term)
+
+    if causal:
+        mask = _and(mask, dk <= dq)
+    if window is not None:
+        mask = _and(mask, dq - dk < window)
+    if kv_mask is not None:               # (B,Sk) validity (e.g. cache fill)
+        mask = _and(mask, kv_mask[:, None, :])
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqt,btkd->bqkgd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+def init_gqa_params(init: Initializer, path: str, d_model: int, n_heads: int,
+                    n_kv: int, head_dim: int) -> Dict[str, Any]:
+    return {
+        "wq": init.dense(f"{path}/wq", (d_model, n_heads, head_dim)),
+        "wk": init.dense(f"{path}/wk", (d_model, n_kv, head_dim)),
+        "wv": init.dense(f"{path}/wv", (d_model, n_kv, head_dim)),
+        "wo": init.dense(f"{path}/wo", (n_heads, head_dim, d_model),
+                         fan_in=n_heads * head_dim),
+    }
+
+
+def make_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def gqa_attention(params, x, *, positions, cache: Optional[Dict] = None,
+                  causal: bool = True, window: Optional[int] = None,
+                  cap: Optional[float] = None, rope_base: float = 10000.0,
+                  ring: bool = False,
+                  impl: str = "xla") -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,D). With a cache, appends S new positions (S=1 for decode).
+
+    ``ring=True`` (sliding-window layers): the cache is a RING BUFFER of
+    ``window`` slots — O(window) memory regardless of sequence length, the
+    mechanism that keeps griffin/gemma2 local layers long-context-feasible.
+    """
+    B, S, _ = x.shape
+    n_heads, head_dim = params["wq"].shape[1], params["wq"].shape[2]
+    n_kv = params["wk"].shape[1]
+    g = n_heads // n_kv
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+
+    cos, sin = rope(positions, head_dim, rope_base)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is not None:
+        start = cache["pos"][0]  # uniform offsets across batch
+        T = cache["k"].shape[1]
+        if ring:
+            # ring buffer: token with absolute position t lives in slot t%T.
+            # Writing S >= T tokens (long prefill): only the last T matter —
+            # slicing avoids duplicate scatter indices (undefined in XLA).
+            if S >= T:
+                k_w, v_w = k[:, S - T:], v[:, S - T:]
+                w_start, W = start + S - T, T
+            else:
+                k_w, v_w, w_start, W = k, v, start, S
+            slots = (w_start + jnp.arange(W, dtype=jnp.int32)) % T
+            ck = cache["k"].at[:, slots].set(k_w)
+            cv = cache["v"].at[:, slots].set(v_w)
+            last = start + S - 1
+            slot_ids = jnp.arange(T, dtype=jnp.int32)
+            abs_pos = last - ((last - slot_ids) % T)        # (T,)
+            kv_positions = jnp.broadcast_to(abs_pos[None], (B, T))
+            kv_mask = jnp.broadcast_to((abs_pos >= 0)[None], (B, T))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, start,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, start,
+                                                     axis=1)
+            kv_positions = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+            kv_mask = kv_positions < (cache["pos"][:, None] + S)
+        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + S}
+        k_full, v_full = ck, cv
+    else:
+        new_cache = None
+        kv_positions = positions
+        kv_mask = None
+        k_full, v_full = k, v
+
+    qg = q.reshape(B, S, n_kv, g, head_dim)
+    out = attention_core(qg, k_full, v_full, q_positions=positions,
+                         kv_positions=kv_positions, causal=causal,
+                         window=window, cap=cap, impl=impl, kv_mask=kv_mask)
+    out = out.reshape(B, S, n_heads, head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention (compressed KV cache)
+# ---------------------------------------------------------------------------
+def init_mla_params(init: Initializer, path: str, d_model: int, n_heads: int,
+                    kv_lora: int, qk_nope: int, qk_rope: int,
+                    v_head: int) -> Dict[str, Any]:
+    return {
+        "wq": init.dense(f"{path}/wq", (d_model, n_heads, qk_nope + qk_rope)),
+        "w_dkv": init.dense(f"{path}/w_dkv", (d_model, kv_lora)),
+        "w_krope": init.dense(f"{path}/w_krope", (d_model, qk_rope)),
+        "w_uk": init.dense(f"{path}/w_uk", (kv_lora, n_heads, qk_nope),
+                           fan_in=kv_lora),
+        "w_uv": init.dense(f"{path}/w_uv", (kv_lora, n_heads, v_head),
+                           fan_in=kv_lora),
+        "wo": init.dense(f"{path}/wo", (n_heads, v_head, d_model),
+                         fan_in=n_heads * v_head),
+    }
+
+
+def make_mla_cache(batch: int, max_len: int, kv_lora: int, qk_rope: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """MLA caches the COMPRESSED latent + rope key: the paper-level memory
+    win (kv_lora + rope ≈ 576 floats/token vs heads*head_dim*2)."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_len, qk_rope), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_attention(params, x, *, positions, cache: Optional[Dict] = None,
+                  rope_base: float = 10000.0,
+                  impl: str = "xla") -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, _ = x.shape
+    n_heads = params["wq"].shape[1]
+    qk_rope = params["w_krope"].shape[1]
+    qk_nope = params["wq"].shape[2] - qk_rope
+    v_head = params["w_uv"].shape[2]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    c_kv = jnp.einsum("bsd,dc->bsc", x, params["w_dkv"])
+    k_rope_new = jnp.einsum("bsd,dr->bsr", x, params["w_krope"])
+
+    cos, sin = rope(positions, qk_rope, rope_base)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is not None:
+        start = cache["pos"][0]
+        c_full = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv,
+                                                     start, axis=1)
+        r_full = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"],
+                                                     k_rope_new, start, axis=1)
+        new_cache = {"c_kv": c_full, "k_rope": r_full, "pos": cache["pos"] + S}
+        T = c_full.shape[1]
+        kv_positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                        (B, T))
+        kv_mask = kv_positions < (cache["pos"][:, None] + S)
+    else:
+        new_cache = None
+        c_full, r_full = c_kv, k_rope_new
+        kv_positions = positions
+        kv_mask = None
+
+    # decompress per-head K and V from the latent (absorbed at compute time)
+    k_nope = jnp.einsum("btc,chk->bthk", c_full, params["w_uk"])
+    v = jnp.einsum("btc,chk->bthk", c_full, params["w_uv"])
+
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    scores = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, r_full,
+                           preferred_element_type=jnp.float32)) * scale
+    dq = positions[:, None, :, None]
+    dk = kv_positions[:, None, None, :]
+    mask = dk <= dq
+    if kv_mask is not None:
+        mask = mask & kv_mask[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+def init_cross_params(init: Initializer, path: str, d_model: int,
+                      n_heads: int, n_kv: int, head_dim: int):
+    return init_gqa_params(init, path, d_model, n_heads, n_kv, head_dim)
+
+
+def cross_attention(params, x, memory_kv, *,
+                    impl: str = "xla") -> jax.Array:
+    """x: (B,S,D) decoder states; memory_kv: dict with precomputed k/v
+    (B,T,KV,hd) from the encoder output (cached once per request)."""
+    B, S, _ = x.shape
+    n_heads, head_dim = params["wq"].shape[1], params["wq"].shape[2]
+    n_kv = params["wk"].shape[1]
+    g = n_heads // n_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k, v = memory_kv["k"], memory_kv["v"]
+    T = k.shape[1]
+    qg = q.reshape(B, S, n_kv, g, head_dim)
+    q_positions = jnp.zeros((B, S), jnp.int32)
+    kv_positions = jnp.zeros((B, T), jnp.int32)
+    out = attention_core(qg, k, v, q_positions=q_positions,
+                         kv_positions=kv_positions, causal=False,
+                         window=None, cap=None, impl=impl)
+    out = out.reshape(B, S, n_heads, head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def encode_memory_kv(params, memory) -> Dict[str, Any]:
+    """Precompute cross-attention K/V from encoder output."""
+    k = jnp.einsum("btd,dhk->bthk", memory, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, params["wv"])
+    return {"k": k, "v": v}

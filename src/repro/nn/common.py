@@ -1,0 +1,113 @@
+"""Common NN building blocks (pure JAX, dict-of-arrays parameters)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "embed_init", "rms_norm", "layer_norm", "rope",
+           "apply_rope", "softcap", "swiglu", "geglu", "relu2_mlp",
+           "Initializer"]
+
+
+class Initializer:
+    """Deterministic fan-in-scaled normal init keyed by a path string."""
+
+    def __init__(self, seed: int = 0, dtype=jnp.bfloat16):
+        self.seed = seed
+        self.dtype = dtype
+
+    def key_for(self, path: str):
+        h = jax.random.PRNGKey(self.seed)
+        return jax.random.fold_in(h, hash(path) % (2 ** 31 - 1))
+
+    def dense(self, path: str, shape: Tuple[int, ...], fan_in: Optional[int] = None):
+        fan_in = fan_in if fan_in is not None else shape[0]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        w = jax.random.normal(self.key_for(path), shape, jnp.float32) * std
+        return w.astype(self.dtype)
+
+    def embed(self, path: str, shape: Tuple[int, ...]):
+        w = jax.random.normal(self.key_for(path), shape, jnp.float32)
+        return w.astype(self.dtype)
+
+    def zeros(self, path: str, shape: Tuple[int, ...]):
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, path: str, shape: Tuple[int, ...]):
+        return jnp.ones(shape, self.dtype)
+
+
+def dense_init(key, shape, dtype=jnp.bfloat16):
+    std = 1.0 / math.sqrt(max(shape[0], 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(positions, head_dim: int, base: float = 10000.0):
+    """Rotary embedding tables: (..., head_dim//2) cos/sin for positions."""
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(base) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def geglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def relu2_mlp(x, w_up, w_down):
+    """Squared-ReLU MLP (Nemotron/Minitron style, non-gated)."""
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_down)

@@ -1,0 +1,577 @@
+"""LM assembly: ArchConfig -> params, train forward, prefill, decode.
+
+One generic machine covers all 10 assigned architectures via a repeating
+LAYER PATTERN of typed blocks:
+
+  "global" — full-attention block (+MLP)       [llama-family, internlm2]
+  "local"  — sliding-window attention (+MLP)   [gemma2, griffin]
+  "mla"    — DeepSeek multi-head latent attention (+MLP/MoE)
+  "rglru"  — Griffin RG-LRU recurrent block (+MLP)
+  "ssd"    — Mamba-2 SSD mixer (mixer-only block)
+
+Layers are STACKED per segment and iterated with ``lax.scan`` so the HLO
+(and compile time) is O(1) in depth — essential for the 27B-class dry-runs.
+Non-uniform stacks (gemma2 local/global 1:1, griffin R,R,A) scan over the
+repeating super-block; remainders and special first layers (deepseek's
+dense layer 0) become their own segments.
+
+Encoder-decoder (seamless) and VLM/audio prefix stubs are handled in
+``forward_train`` / ``decode_step`` via config flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import moe as moe_lib
+from repro.nn import rglru as rglru_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.common import (Initializer, geglu, relu2_mlp, rms_norm,
+                             softcap, swiglu)
+from repro.sharding import constrain
+
+__all__ = ["ArchConfig", "init_params", "forward_train", "init_cache",
+           "prefill", "decode_step", "lm_loss", "build_segments",
+           "encode", "count_params", "make_cross_kv"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    mlp_type: str = "swiglu"        # swiglu|geglu|relu2
+    layer_pattern: Tuple[str, ...] = ("global",)
+    window: Optional[int] = None
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    post_norm: bool = False         # gemma2-style post-block norms
+    rope_base: float = 10000.0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_shared: Optional[int] = None
+    first_dense: int = 0
+    dense_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    moe_impl: str = "gspmd"         # gspmd | ep (shard_map, see nn/moe.py)
+    # MLA
+    mla: bool = False
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    # SSM (mamba2)
+    d_state: int = 0
+    d_inner: int = 0
+    ssm_head_dim: int = 64
+    chunk: int = 128
+    n_groups: int = 1
+    # RG-LRU
+    lru_width: Optional[int] = None
+    # enc-dec
+    enc_layers: int = 0
+    # modality prefix stub (vlm: patches; audio: frames via encoder)
+    n_prefix: int = 0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # "nothing": recompute everything in bwd (min memory, re-runs fwd
+    # collectives); "dots": save matmul/collective outputs, recompute only
+    # elementwise (Megatron-style selective recompute)
+    remat_policy: str = "nothing"
+    attn_impl: str = "xla"          # xla | flash
+    # lax.scan over layer stacks keeps HLO size O(1) in depth (fast
+    # compiles); the roofline pass unrolls because XLA's cost_analysis
+    # counts while-loop bodies ONCE, not trip-count times.
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_uses_moe(self, layer_idx: int) -> bool:
+        return self.moe and layer_idx >= self.first_dense
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[str, ...]   # block types within one super-block
+    count: int                 # how many super-blocks (scan length)
+    start_layer: int           # absolute index of first layer (moe switch)
+
+
+def build_segments(cfg: ArchConfig) -> List[Segment]:
+    segs: List[Segment] = []
+    p = len(cfg.layer_pattern)
+    layer = 0
+    n = cfg.n_layers
+    # special-case leading dense layers in MoE models (deepseek layer 0)
+    if cfg.moe and cfg.first_dense > 0:
+        segs.append(Segment(cfg.layer_pattern * 1, 0, 0))  # placeholder fix below
+        segs.pop()
+        lead = cfg.first_dense
+        segs.append(Segment(tuple(cfg.layer_pattern[(layer + i) % p]
+                                  for i in range(lead)), 1, 0))
+        layer += lead
+    remaining = n - layer
+    full = remaining // p
+    if full > 0:
+        segs.append(Segment(tuple(cfg.layer_pattern), full, layer))
+        layer += full * p
+    rem = n - layer
+    if rem > 0:
+        segs.append(Segment(tuple(cfg.layer_pattern[i % p] for i in range(rem)),
+                            1, layer))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# per-block param init
+# ---------------------------------------------------------------------------
+def _init_mlp(init: Initializer, path: str, cfg: ArchConfig,
+              d_ff: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.mlp_type == "relu2":
+        return {"w_up": init.dense(f"{path}/up", (d, d_ff)),
+                "w_down": init.dense(f"{path}/down", (d_ff, d), fan_in=d_ff)}
+    return {"w_gate": init.dense(f"{path}/gate", (d, d_ff)),
+            "w_up": init.dense(f"{path}/up", (d, d_ff)),
+            "w_down": init.dense(f"{path}/down", (d_ff, d), fan_in=d_ff)}
+
+
+def _init_block(init: Initializer, path: str, cfg: ArchConfig, btype: str,
+                layer_idx: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": init.zeros(f"{path}/ln1", (d,))}
+    if cfg.post_norm:
+        p["post_ln1"] = init.zeros(f"{path}/post_ln1", (d,))
+    if btype in ("global", "local"):
+        p["attn"] = attn.init_gqa_params(init, f"{path}/attn", d, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.resolved_head_dim)
+    elif btype == "mla":
+        p["attn"] = attn.init_mla_params(init, f"{path}/mla", d, cfg.n_heads,
+                                         cfg.kv_lora, cfg.qk_nope,
+                                         cfg.qk_rope, cfg.v_head)
+    elif btype == "rglru":
+        p["rec"] = rglru_lib.init_rglru_params(
+            init, f"{path}/rglru", d, cfg.lru_width or d)
+    elif btype == "ssd":
+        p["mix"] = ssm_lib.init_mamba2_params(
+            init, f"{path}/ssd", d, cfg.d_inner, cfg.d_state,
+            cfg.ssm_head_dim, n_groups=cfg.n_groups)
+        return p  # mamba2 block has no separate MLP
+    else:
+        raise ValueError(f"unknown block type {btype}")
+
+    p["ln2"] = init.zeros(f"{path}/ln2", (d,))
+    if cfg.post_norm:
+        p["post_ln2"] = init.zeros(f"{path}/post_ln2", (d,))
+    if cfg.layer_uses_moe(layer_idx):
+        p["moe"] = moe_lib.init_moe_params(
+            init, f"{path}/moe", d, cfg.d_ff, cfg.n_experts,
+            n_shared=cfg.n_shared, d_shared=cfg.d_shared)
+    else:
+        d_ff = cfg.dense_ff if (cfg.moe and cfg.dense_ff) else cfg.d_ff
+        p["mlp"] = _init_mlp(init, f"{path}/mlp", cfg, d_ff)
+    return p
+
+
+def init_params(cfg: ArchConfig, seed: int = 0) -> Dict[str, Any]:
+    init = Initializer(seed, cfg.dtype)
+    params: Dict[str, Any] = {
+        "embed_table": init.embed("embed", (cfg.vocab, cfg.d_model)),
+        "final_norm": init.zeros("final_norm", (cfg.d_model,)),
+    }
+    if cfg.n_prefix > 0:
+        params["prefix_proj"] = init.dense("prefix_proj",
+                                           (cfg.d_model, cfg.d_model))
+    segs = build_segments(cfg)
+    seg_params = []
+    for si, seg in enumerate(segs):
+        pos_params = []
+        for pi, btype in enumerate(seg.pattern):
+            if seg.count == 1:
+                pos_params.append(_init_block(
+                    init, f"seg{si}/p{pi}", cfg, btype,
+                    seg.start_layer + pi))
+            else:
+                stacked = [
+                    _init_block(init, f"seg{si}/b{c}/p{pi}", cfg, btype,
+                                seg.start_layer + c * len(seg.pattern) + pi)
+                    for c in range(seg.count)
+                ]
+                pos_params.append(jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *stacked))
+        seg_params.append(pos_params)
+    params["segments"] = seg_params
+
+    if cfg.enc_layers > 0:
+        enc_segs = []
+        for li in range(cfg.enc_layers):
+            enc_segs.append(_init_block(init, f"enc{li}", cfg, "global", li))
+        enc_stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                             *enc_segs)
+        cross = [attn.init_cross_params(init, f"cross{li}", cfg.d_model,
+                                        cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim)
+                 for li in range(cfg.n_layers)]
+        params["encoder"] = enc_stacked
+        params["enc_final_norm"] = init.zeros("enc_final_norm", (cfg.d_model,))
+        params["cross"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                                 *cross)
+        params["cross_ln"] = init.zeros("cross_ln", (cfg.n_layers, cfg.d_model))
+    return params
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# block application (shared by train / prefill / decode paths)
+# ---------------------------------------------------------------------------
+def _mlp_apply(cfg: ArchConfig, p: Dict, x):
+    if "moe" in p:
+        fn = moe_lib.moe_ffn_ep if cfg.moe_impl == "ep" else moe_lib.moe_ffn
+        return fn(p["moe"], x, top_k=cfg.top_k,
+                  capacity_factor=cfg.capacity_factor)
+    m = p["mlp"]
+    if cfg.mlp_type == "relu2":
+        return relu2_mlp(x, m["w_up"], m["w_down"])
+    if cfg.mlp_type == "geglu":
+        return geglu(x, m["w_gate"], m["w_up"], m["w_down"])
+    return swiglu(x, m["w_gate"], m["w_up"], m["w_down"])
+
+
+def _apply_block(cfg: ArchConfig, btype: str, p: Dict, x, *, positions,
+                 cache=None, memory_kv=None, cross_p=None, cross_ln=None,
+                 decode: bool = False):
+    """Returns (x, new_cache)."""
+    h = rms_norm(x, p["ln1"])
+    new_cache = None
+    if btype in ("global", "local"):
+        window = cfg.window if btype == "local" else None
+        # bounded-window layers use the RING-BUFFER cache (O(window) slots)
+        ring = (btype == "local" and window is not None
+                and cache is not None and cache["k"].shape[1] <= window)
+        out, new_cache = attn.gqa_attention(
+            p["attn"], h, positions=positions, cache=cache, causal=True,
+            window=window, cap=cfg.attn_softcap, rope_base=cfg.rope_base,
+            ring=ring, impl=cfg.attn_impl)
+    elif btype == "mla":
+        out, new_cache = attn.mla_attention(
+            p["attn"], h, positions=positions, cache=cache,
+            rope_base=cfg.rope_base, impl=cfg.attn_impl)
+    elif btype == "rglru":
+        if decode:
+            out, new_cache = rglru_lib.rglru_decode_step(p["rec"], h, cache)
+        else:
+            out, new_cache = rglru_lib.rglru_block(p["rec"], h, cache)
+    elif btype == "ssd":
+        if decode:
+            out, new_cache = ssm_lib.mamba2_decode_step(
+                p["mix"], h, cache, d_inner=cfg.d_inner, d_state=cfg.d_state,
+                head_dim=cfg.ssm_head_dim, n_groups=cfg.n_groups)
+        elif cache is not None:
+            # prefill: mixer + write final SSM state / conv tail to cache
+            out, new_cache = ssm_lib.mamba2_prefill(
+                p["mix"], h, cache, d_inner=cfg.d_inner, d_state=cfg.d_state,
+                head_dim=cfg.ssm_head_dim, n_groups=cfg.n_groups,
+                chunk=cfg.chunk)
+        else:
+            out = ssm_lib.mamba2_mixer(
+                p["mix"], h, d_inner=cfg.d_inner, d_state=cfg.d_state,
+                head_dim=cfg.ssm_head_dim, n_groups=cfg.n_groups,
+                chunk=cfg.chunk,
+                impl="pallas" if cfg.attn_impl == "flash" else "xla")
+            new_cache = cache
+        if cfg.post_norm:
+            out = rms_norm(out, p["post_ln1"])
+        return x + out, new_cache
+    if cfg.post_norm:
+        out = rms_norm(out, p["post_ln1"])
+    x = x + out
+
+    # cross attention (enc-dec decoder layers); memory_kv holds this
+    # layer's precomputed {"k","v"} slices (computed once per request)
+    if cross_p is not None:
+        hc = rms_norm(x, cross_ln)
+        x = x + attn.cross_attention(cross_p, hc, memory_kv,
+                                     impl=cfg.attn_impl)
+
+    h2 = rms_norm(x, p["ln2"])
+    out2 = _mlp_apply(cfg, p, h2)
+    if cfg.post_norm:
+        out2 = rms_norm(out2, p["post_ln2"])
+    return x + out2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def _block_cache(cfg: ArchConfig, btype: str, batch: int, max_len: int):
+    if btype in ("global",):
+        return attn.make_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                  cfg.resolved_head_dim, cfg.dtype)
+    if btype == "local":
+        wl = min(max_len, cfg.window or max_len)
+        return attn.make_kv_cache(batch, max_len if cfg.window is None
+                                  else min(max_len, max(wl, 1)),
+                                  cfg.n_kv_heads, cfg.resolved_head_dim,
+                                  cfg.dtype)
+    if btype == "mla":
+        return attn.make_mla_cache(batch, max_len, cfg.kv_lora, cfg.qk_rope,
+                                   cfg.dtype)
+    if btype == "rglru":
+        return rglru_lib.make_rglru_cache(batch, cfg.lru_width or cfg.d_model,
+                                          dtype=cfg.dtype)
+    if btype == "ssd":
+        return ssm_lib.make_mamba2_cache(batch, cfg.d_inner, cfg.d_state,
+                                         cfg.ssm_head_dim, cfg.n_groups,
+                                         dtype=cfg.dtype)
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Per-segment, per-pattern-position caches (stacked over scan count)."""
+    segs = build_segments(cfg)
+    seg_caches = []
+    for seg in segs:
+        pos_caches = []
+        for btype in seg.pattern:
+            c = _block_cache(cfg, btype, batch, max_len)
+            if seg.count > 1:
+                c = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (seg.count,) + x.shape).copy(), c)
+            pos_caches.append(c)
+        seg_caches.append(pos_caches)
+    return seg_caches
+
+
+# ---------------------------------------------------------------------------
+# trunk runner (shared): iterates segments, scanning stacked super-blocks
+# ---------------------------------------------------------------------------
+def _run_trunk(cfg: ArchConfig, params, x, positions, caches=None,
+               decode: bool = False, memory_kv=None):
+    segs = build_segments(cfg)
+    new_caches = [] if caches is not None else None
+    layer_idx = 0  # absolute layer counter for cross-attn param slicing
+
+    for si, seg in enumerate(segs):
+        seg_p = params["segments"][si]
+        seg_c = caches[si] if caches is not None else [None] * len(seg.pattern)
+
+        if seg.count == 1:
+            outs = []
+            for pi, btype in enumerate(seg.pattern):
+                cross_p = cross_ln = layer_kv = None
+                if memory_kv is not None:
+                    cross_p = jax.tree_util.tree_map(
+                        lambda a: a[layer_idx], params["cross"])
+                    cross_ln = params["cross_ln"][layer_idx]
+                    layer_kv = {"k": memory_kv["k"][layer_idx],
+                                "v": memory_kv["v"][layer_idx]}
+                x, nc = _apply_block(cfg, btype, seg_p[pi], x,
+                                     positions=positions, cache=seg_c[pi],
+                                     memory_kv=layer_kv, cross_p=cross_p,
+                                     cross_ln=cross_ln, decode=decode)
+                outs.append(nc)
+                layer_idx += 1
+            if new_caches is not None:
+                new_caches.append(outs)
+        else:
+            seg_start = layer_idx
+
+            def body(carry, inp):
+                xx = carry
+                slice_p, slice_c, blk = inp
+                ncs = []
+                for pi, btype in enumerate(seg.pattern):
+                    cross_p = cross_ln = layer_kv = None
+                    if memory_kv is not None:
+                        li = seg_start + blk * len(seg.pattern) + pi
+                        cross_p = jax.tree_util.tree_map(
+                            lambda a: a[li], params["cross"])
+                        cross_ln = params["cross_ln"][li]
+                        layer_kv = {"k": memory_kv["k"][li],
+                                    "v": memory_kv["v"][li]}
+                    xx, nc = _apply_block(
+                        cfg, btype, slice_p[pi], xx, positions=positions,
+                        cache=slice_c[pi] if slice_c is not None else None,
+                        memory_kv=layer_kv, cross_p=cross_p,
+                        cross_ln=cross_ln, decode=decode)
+                    ncs.append(nc)
+                return xx, ncs
+
+            body_fn = body
+            if cfg.remat and not decode:
+                policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                          if cfg.remat_policy == "dots"
+                          else jax.checkpoint_policies.nothing_saveable)
+                body_fn = jax.checkpoint(body, policy=policy)
+            xs_c = seg_c if caches is not None else None
+            if not cfg.scan_layers:
+                # unrolled: identical math, full HLO (accurate cost model)
+                ncs_all = []
+                for c in range(seg.count):
+                    slice_p = [jax.tree_util.tree_map(lambda a: a[c], p)
+                               for p in seg_p]
+                    slice_c = ([jax.tree_util.tree_map(lambda a: a[c], cc)
+                                for cc in xs_c] if xs_c is not None else None)
+                    x, ncs = body_fn(x, (slice_p, slice_c, c))
+                    ncs_all.append(ncs)
+                if new_caches is not None:
+                    if xs_c is not None:
+                        new_caches.append(jax.tree_util.tree_map(
+                            lambda *xs: jnp.stack(xs), *ncs_all))
+                    else:
+                        new_caches.append(None)
+            else:
+                blks = jnp.arange(seg.count)
+                if xs_c is None:
+                    x, _ = jax.lax.scan(
+                        lambda c, i: (body_fn(c, (i[0], None, i[1]))[0],
+                                      None),
+                        x, (seg_p, blks))
+                    if new_caches is not None:
+                        new_caches.append(None)
+                else:
+                    x, ncs = jax.lax.scan(
+                        lambda c, i: body_fn(c, i), x, (seg_p, xs_c, blks))
+                    if new_caches is not None:
+                        new_caches.append(ncs)
+            layer_idx += seg.count * len(seg.pattern)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def _embed(cfg: ArchConfig, params, tokens):
+    x = jnp.take(params["embed_table"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits(cfg: ArchConfig, params, x):
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed_table"],
+                        preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """Encoder stack over prefix frame embeddings (audio enc-dec)."""
+    x = jnp.einsum("bsd,de->bse", frames, params["prefix_proj"]) \
+        if "prefix_proj" in params else frames
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, slice_p):
+        h = rms_norm(carry, slice_p["ln1"])
+        out, _ = attn.gqa_attention(slice_p["attn"], h, positions=positions,
+                                    causal=False, rope_base=cfg.rope_base,
+                                    impl=cfg.attn_impl)
+        xx = carry + out
+        h2 = rms_norm(xx, slice_p["ln2"])
+        m = slice_p["mlp"]
+        xx = xx + swiglu(h2, m["w_gate"], m["w_up"], m["w_down"])
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if not cfg.scan_layers:
+        for li in range(cfg.enc_layers):
+            x, _ = body_fn(x, jax.tree_util.tree_map(
+                lambda a: a[li], params["encoder"]))
+        return rms_norm(x, params["enc_final_norm"])
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"])
+
+
+def make_cross_kv(cfg: ArchConfig, params, memory):
+    """Precompute every decoder layer's cross-attention K/V from encoder
+    memory (one einsum over the stacked per-layer projections; computed
+    once per request, reused by all decode steps)."""
+    ck = jnp.einsum("btd,ldhk->lbthk", memory, params["cross"]["wk"])
+    cv = jnp.einsum("btd,ldhk->lbthk", memory, params["cross"]["wv"])
+    return {"k": ck, "v": cv}
+
+
+def forward_train(cfg: ArchConfig, params, tokens, prefix_embeds=None,
+                  enc_frames=None):
+    """tokens: (B,S) -> logits (B,S,V). Prefix embeds are prepended (VLM);
+    enc_frames trigger the encoder-decoder path (audio)."""
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens)
+    memory_kv = None
+    if cfg.enc_layers > 0 and enc_frames is not None:
+        memory = encode(cfg, params, enc_frames)
+        memory_kv = make_cross_kv(cfg, params, memory)
+    if prefix_embeds is not None:
+        pe = jnp.einsum("bsd,de->bse", prefix_embeds.astype(x.dtype),
+                        params["prefix_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", None, None)
+    x, _ = _run_trunk(cfg, params, x, positions, caches=None, decode=False,
+                      memory_kv=memory_kv)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    return _logits(cfg, params, x)
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, prefix_embeds=None,
+            enc_frames=None):
+    logits = forward_train(cfg, params, tokens, prefix_embeds, enc_frames)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, prefix_embeds=None,
+            enc_frames=None):
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens)
+    memory_kv = None
+    if cfg.enc_layers > 0 and enc_frames is not None:
+        memory = encode(cfg, params, enc_frames)
+        memory_kv = make_cross_kv(cfg, params, memory)
+    if prefix_embeds is not None:
+        pe = jnp.einsum("bsd,de->bse", prefix_embeds.astype(x.dtype),
+                        params["prefix_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, new_caches = _run_trunk(cfg, params, x, positions, caches=cache,
+                               decode=False, memory_kv=memory_kv)
+    return _logits(cfg, params, x[:, -1:]), new_caches
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, memory_kv=None):
+    """token: (B,1); pos: (B,) absolute positions. One-token decode."""
+    B = token.shape[0]
+    x = _embed(cfg, params, token)
+    positions = pos[:, None].astype(jnp.int32)
+    x, new_caches = _run_trunk(cfg, params, x, positions, caches=cache,
+                               decode=True, memory_kv=memory_kv)
+    return _logits(cfg, params, x), new_caches

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t = sigmoid(W_a x_t),
+i_t = sigmoid(W_x x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth on TPU); decode carries the O(1) hidden state.
+The full residual block is: conv1d(4) -> RG-LRU on one branch, GeLU gate
+on the other, merged by elementwise product and projected out.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import Initializer
+
+__all__ = ["init_rglru_params", "rglru_block", "rglru_decode_step",
+           "make_rglru_cache"]
+
+_C = 8.0
+
+
+def init_rglru_params(init: Initializer, path: str, d_model: int,
+                      lru_width: int, d_conv: int = 4) -> Dict[str, Any]:
+    return {
+        "in_x": init.dense(f"{path}/in_x", (d_model, lru_width)),
+        "in_gate": init.dense(f"{path}/in_gate", (d_model, lru_width)),
+        "conv_w": init.dense(f"{path}/conv_w", (d_conv, lru_width),
+                             fan_in=d_conv),
+        "w_a": init.dense(f"{path}/w_a", (lru_width, lru_width)),
+        "w_x": init.dense(f"{path}/w_x", (lru_width, lru_width)),
+        "lam": init.ones(f"{path}/lam", (lru_width,)) * 2.0,
+        "out": init.dense(f"{path}/out", (lru_width, d_model),
+                          fan_in=lru_width),
+    }
+
+
+def _rglru_core(params, u, h0: Optional[jax.Array] = None):
+    """u: (B,S,W) conv output. Linear recurrence via associative scan."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, params["w_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, params["w_x"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * u.astype(jnp.float32))
+
+    if h0 is not None:
+        # fold the initial state in as an extra leading element
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(jnp.float32), gated],
+                                axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    A, Bv = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = Bv if h0 is None else Bv[:, 1:]
+    return h.astype(u.dtype), Bv[:, -1]
+
+
+def make_rglru_cache(batch: int, lru_width: int, d_conv: int = 4,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, lru_width), dtype),
+    }
+
+
+def _conv1d(x, w, tail=None):
+    K = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if tail is None else tail)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out, (xp[:, -(K - 1):, :] if K > 1 else None)
+
+
+def rglru_block(params, x, cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,D) -> (B,S,D). With cache: stateful continuation."""
+    branch = jnp.einsum("bsd,dw->bsw", x, params["in_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"])
+                       .astype(jnp.float32), approximate=True)
+    tail = cache["conv"] if cache is not None else None
+    conv, new_tail = _conv1d(branch, params["conv_w"], tail)
+    h0 = cache["h"] if cache is not None else None
+    h, h_last = _rglru_core(params, conv, h0)
+    y = (h.astype(jnp.float32) * gate).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last, "conv": new_tail}
+    return out, new_cache
+
+
+def rglru_decode_step(params, x, cache: Dict
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode: O(1) update. x: (B,1,D)."""
+    branch = jnp.einsum("bsd,dw->bsw", x, params["in_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"])
+                       .astype(jnp.float32), approximate=True)
+    conv, new_tail = _conv1d(branch, params["conv_w"], cache["conv"])
+    u = conv[:, 0]  # (B,W)
+    r = jax.nn.sigmoid((u @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_x"]).astype(jnp.float32))
+    a = jnp.exp(-_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    y = (h[:, None] * gate).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    return out, {"h": h, "conv": new_tail}

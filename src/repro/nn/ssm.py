@@ -1,0 +1,242 @@
+"""Mamba-2 SSD mixer (state-space duality, chunked algorithm).
+
+The sequence is processed in chunks of length L: quadratic attention-like
+compute inside a chunk (MXU-friendly matmuls) plus a linear recurrence of
+per-chunk states across chunks — the TPU-native adaptation of the paper's
+SSD algorithm. The chunk core can route through the Pallas ``ssd_scan``
+kernel (``impl="pallas"``) or the pure-jnp reference (``impl="xla"``).
+
+Decode carries an O(1) recurrent state: (B, H, P, N) SSM state + the
+depthwise-conv tail — this is what makes ``long_500k`` decoding feasible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import Initializer, rms_norm
+
+__all__ = ["init_mamba2_params", "mamba2_mixer", "mamba2_prefill",
+           "mamba2_decode_step", "make_mamba2_cache", "ssd_chunked_ref"]
+
+
+def init_mamba2_params(init: Initializer, path: str, d_model: int,
+                       d_inner: int, d_state: int, head_dim: int,
+                       d_conv: int = 4, n_groups: int = 1) -> Dict[str, Any]:
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        "in_proj": init.dense(f"{path}/in_proj",
+                              (d_model, 2 * d_inner + 2 * n_groups * d_state
+                               + n_heads)),
+        "conv_w": init.dense(f"{path}/conv_w", (d_conv, conv_dim),
+                             fan_in=d_conv),
+        "A_log": init.zeros(f"{path}/A_log", (n_heads,)) + jnp.asarray(
+            jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+            init.dtype),
+        "D": init.ones(f"{path}/D", (n_heads,)),
+        "dt_bias": init.zeros(f"{path}/dt_bias", (n_heads,)),
+        "norm_scale": init.zeros(f"{path}/norm", (d_inner,)),
+        "out_proj": init.dense(f"{path}/out_proj", (d_inner, d_model),
+                               fan_in=d_inner),
+    }
+
+
+def _split_in_proj(zxbcdt, d_inner, d_state, n_groups, n_heads):
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * n_groups * d_state], axis=-1)
+    return z, xbc, dt
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int, initial_state=None,
+                    return_final: bool = False):
+    """Pure-jnp chunked SSD. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n).
+
+    Returns y:(b,s,h,p); with ``return_final`` also the outgoing SSM state
+    (b,h,n,p) — the prefill path writes it into the decode cache.
+    ``initial_state`` continues from a previous segment. Unaligned lengths
+    are padded with dt=0 (zero decay/update contribution).
+    """
+    b, s_orig, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    s = ((s_orig + chunk - 1) // chunk) * chunk
+    if s != s_orig:
+        pad = ((0, 0), (0, s - s_orig), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        B = jnp.pad(B, pad)
+        C = jnp.pad(C, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, s - s_orig), (0, 0)))
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]      # (b,nc,l,h) <0
+    cum = jnp.cumsum(dA, axis=2)                               # (b,nc,l,h)
+
+    # intra-chunk: y_i += sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    # mask INSIDE the exp: anticausal (i<j) diffs are positive and can
+    # overflow f32; 0*inf would poison the gradient with NaNs.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (b,nc,i,j,h)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+    cb = jnp.einsum("bclhn,bcmhn->bclmh", Ch.astype(jnp.float32),
+                    Bh.astype(jnp.float32))                    # (b,nc,i,j,h)
+    w = cb * decay * dtc[:, :, None, :, :]                     # (b,nc,i,j,h)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w, xc.astype(jnp.float32))
+
+    # chunk-final states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                     # (b,nc,l,h)
+    sdt = seg * dtc
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp",
+                        sdt, Bh.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence: S_c_in = exp(sum dA_c) S_{c-1}_in + S_{c-1}
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (b,nc,h)
+
+    def scan_fn(prev, inp):
+        st, dec = inp
+        new = prev * dec[..., None, None] + st
+        return new, prev  # emit the INCOMING state for this chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)          # (nc,b,h,n,p)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)      # (nc,b,h)
+    init = (jnp.zeros_like(states_t[0]) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, incoming = jax.lax.scan(scan_fn, init, (states_t, decay_t))
+    incoming = jnp.moveaxis(incoming, 0, 1)        # (b,nc,h,n,p)
+
+    # inter-chunk contribution: y_i += C_i . (exp(cum_i) * S_in)
+    y_inter = jnp.einsum("bclhn,bclh,bchnp->bclhp",
+                         Ch.astype(jnp.float32), jnp.exp(cum), incoming)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    y = y.astype(x.dtype)
+    if return_final:
+        return y, final
+    return y
+
+
+def make_mamba2_cache(batch: int, d_inner: int, d_state: int, head_dim: int,
+                      n_groups: int = 1, d_conv: int = 4,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_tail=None):
+    """Depthwise causal conv, width K. xbc: (B,S,C); conv_w: (K,C)."""
+    K = conv_w.shape[0]
+    if conv_tail is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_tail
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(K))
+    new_tail = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_tail
+
+
+def mamba2_mixer(params, x, *, d_inner: int, d_state: int, head_dim: int,
+                 n_groups: int = 1, chunk: int = 128,
+                 impl: str = "xla") -> jax.Array:
+    """Training / prefill path. x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    n_heads = d_inner // head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(zxbcdt, d_inner, d_state, n_groups, n_heads)
+    xbc, _ = _causal_conv(xbc, params["conv_w"])
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + n_groups * d_state],
+                           axis=-1)
+    xs = xs.reshape(B, S, n_heads, head_dim)
+    Bc = Bc.reshape(B, S, n_groups, d_state)
+    Cc = Cc.reshape(B, S, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y = ssd_ops.ssd_scan(xs, dt, A, Bc, Cc, chunk=chunk)
+    else:
+        y = ssd_chunked_ref(xs, dt, A, Bc, Cc, chunk=chunk)
+    y = y + xs * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"])
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def mamba2_prefill(params, x, cache, *, d_inner: int, d_state: int,
+                   head_dim: int, n_groups: int = 1, chunk: int = 128
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill: full-sequence mixer that also WRITES the decode cache
+    (final SSM state + conv tail). Uses the chunked ref path (the Pallas
+    kernel's state lives in scratch; exporting it is a follow-up)."""
+    B, S, D = x.shape
+    n_heads = d_inner // head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(zxbcdt, d_inner, d_state, n_groups, n_heads)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], cache["conv"])
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + n_groups * d_state],
+                           axis=-1)
+    xs = xs.reshape(B, S, n_heads, head_dim)
+    Bc = Bc.reshape(B, S, n_groups, d_state)
+    Cc = Cc.reshape(B, S, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked_ref(xs, dt, A, Bc, Cc, chunk=chunk,
+                               initial_state=cache["ssm"], return_final=True)
+    y = y + xs * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"ssm": final, "conv": new_tail}
+
+
+def mamba2_decode_step(params, x, cache, *, d_inner: int, d_state: int,
+                       head_dim: int, n_groups: int = 1
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode. x: (B,1,D); O(1) state update."""
+    B, S, D = x.shape
+    assert S == 1
+    n_heads = d_inner // head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(zxbcdt, d_inner, d_state, n_groups, n_heads)
+    xbc_out, new_tail = _causal_conv(xbc, params["conv_w"], cache["conv"])
+    xs, Bc, Cc = jnp.split(xbc_out, [d_inner, d_inner + n_groups * d_state],
+                           axis=-1)
+    xs = xs.reshape(B, n_heads, head_dim)
+    Bc = jnp.repeat(Bc.reshape(B, n_groups, d_state), n_heads // n_groups, 1)
+    Cc = jnp.repeat(Cc.reshape(B, n_groups, d_state), n_heads // n_groups, 1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                                  # (B,H)
+    # state: (B,H,N,P)
+    outer = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bc.astype(jnp.float32),
+                       xs.astype(jnp.float32))
+    new_ssm = cache["ssm"] * dA[..., None, None] + outer
+    y = jnp.einsum("bhn,bhnp->bhp", Cc.astype(jnp.float32), new_ssm)
+    y = y.astype(x.dtype) + xs * params["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"ssm": new_ssm, "conv": new_tail}

@@ -1,0 +1,102 @@
+"""Self-contained optimisers (no optax): SGD, Adam, AdamW.
+
+Used by MAP inference, ADVI and the large-scale LM training loop. Each
+optimiser is a pair of pure functions (init, update) over pytrees, safe
+under jit/pjit and donation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "clip_by_global_norm",
+           "global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        del params
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+        new_m = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree_util.tree_map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam; with weight_decay > 0 this is AdamW (decoupled decay)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return _AdamState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(zeros, params),
+                          jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        b1t = 1.0 - jnp.power(b1, step.astype(jnp.float32))
+        b2t = 1.0 - jnp.power(b2, step.astype(jnp.float32))
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1.0 - b1) * g32
+            v_new = b2 * v + (1.0 - b2) * jnp.square(g32)
+            mhat = m_new / b1t
+            vhat = v_new / b2t
+            delta = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+            return delta.astype(p.dtype), m_new, v_new
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return deltas, _AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def apply_updates(params, deltas):
+    return jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), params, deltas)

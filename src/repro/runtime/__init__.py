@@ -1,0 +1,4 @@
+from repro.runtime.elastic import plan_elastic_mesh  # noqa: F401
+from repro.runtime.heartbeat import HeartbeatMonitor  # noqa: F401
+from repro.runtime.preemption import PreemptionHandler  # noqa: F401
+from repro.runtime.straggler import StragglerDetector  # noqa: F401

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests on REDUCED same-family configs.
+
+Each assigned architecture gets: (1) one forward/train step on CPU with
+shape + finiteness assertions (incl. gradients), and (2) a prefill+decode
+consistency check where the step-by-step decode must reproduce the
+full-sequence forward logits. Full-size configs are exercised only via the
+AOT dry-run (no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.nn import lm
+
+ARCHS = list(configs.ARCH_NAMES)
+
+
+def _smoke_inputs(cfg, key, B=2, S=32):
+    ks = jax.random.split(key, 3)
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    extras = {}
+    if cfg.enc_layers > 0:
+        extras["enc_frames"] = jax.random.normal(
+            ks[2], (B, cfg.n_prefix, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype) * 0.1
+    elif cfg.n_prefix > 0:
+        extras["prefix_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_prefix, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype) * 0.1
+    return tokens, labels, extras
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = configs.get_config(arch)
+    assert cfg.name == arch
+    # assignment table invariants
+    expect = {
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102_400),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49_155),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256_000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49_152),
+        "granite-8b": (36, 4096, 32, 8, 14_336, 49_152),
+        "gemma2-27b": (46, 4608, 32, 16, 36_864, 256_000),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12_288, 256_000),
+        "internvl2-26b": (48, 6144, 48, 8, 16_384, 92_553),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50_280),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256_206),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect, f"{arch}: {got} != {expect}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = lm.init_params(cfg, seed=0)
+    tokens, labels, extras = _smoke_inputs(cfg, jax.random.PRNGKey(0))
+
+    logits = lm.forward_train(cfg, params, tokens, **extras)
+    B, S = tokens.shape
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(cfg, p, tokens, labels, **extras))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_matches_forward(arch):
+    """prefill(S-1) + decode(1 token) logits == forward_train last logits."""
+    import dataclasses
+    cfg = configs.get_smoke_config(arch)
+    if cfg.moe:
+        # capacity-drop patterns depend on the dispatch batch; the test
+        # verifies CACHE correctness, so give every token guaranteed room
+        cfg = dataclasses.replace(cfg, capacity_factor=float(
+            cfg.n_experts / max(cfg.top_k, 1)))
+    params = lm.init_params(cfg, seed=1)
+    B, S = 2, 16
+    tokens, _, extras = _smoke_inputs(cfg, jax.random.PRNGKey(1), B=B, S=S)
+
+    full = lm.forward_train(cfg, params, tokens, **extras)
+
+    max_len = S + cfg.n_prefix if cfg.n_prefix and cfg.enc_layers == 0 else S
+    cache = lm.init_cache(cfg, B, max_len)
+    memory_kv = None
+    if cfg.enc_layers > 0:
+        memory = lm.encode(cfg, params, extras["enc_frames"])
+        memory_kv = lm.make_cross_kv(cfg, params, memory)
+        pre_extras = dict(extras)
+    else:
+        pre_extras = extras
+    logits_pre, cache = lm.prefill(cfg, params, tokens[:, :-1], cache,
+                                   **pre_extras)
+    # decode the final token
+    n_prefix = cfg.n_prefix if (cfg.n_prefix and cfg.enc_layers == 0) else 0
+    pos = jnp.full((B,), S - 1 + n_prefix, jnp.int32)
+    logits_dec, _ = lm.decode_step(cfg, params, tokens[:, -1:], cache, pos,
+                                   memory_kv=memory_kv)
+    want = full[:, -1, :]
+    got = logits_dec[:, 0, :]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shape_grid_applicability(arch):
+    """long_500k must be available exactly for bounded-state stacks."""
+    bounded = {"mamba2-1.3b", "recurrentgemma-9b"}
+    assert configs.supports_shape(arch, "train_4k")
+    assert configs.supports_shape(arch, "prefill_32k")
+    assert configs.supports_shape(arch, "decode_32k")
+    assert configs.supports_shape(arch, "long_500k") == (arch in bounded)
+    if arch not in bounded:
+        assert "KV cache" in configs.skip_reason(arch, "long_500k")
+
+
+def test_cells_grid_counts():
+    all_cells = configs.cells(include_skipped=True)
+    runnable = configs.cells()
+    assert len(all_cells) == 40
+    assert len(runnable) == 32
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_no_allocation(arch):
+    for shape in configs.SHAPES:
+        if not configs.supports_shape(arch, shape):
+            continue
+        spec = configs.input_specs(arch, shape)
+        for k, v in spec.items():
+            assert isinstance(v, jax.ShapeDtypeStruct), (arch, shape, k)
+        sh = configs.SHAPES[shape]
+        if sh.kind in ("train", "prefill"):
+            assert spec["tokens"].shape == (sh.global_batch, sh.seq_len)
+        else:
+            assert spec["token"].shape == (sh.global_batch, 1)

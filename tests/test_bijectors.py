@@ -1,0 +1,82 @@
+"""Bijector round-trips and log-det-Jacobians vs autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+from hypothesis.extra import numpy as hnp
+
+from repro import bijectors as bj
+from repro import dists
+
+BIJS = [
+    bj.Identity(),
+    bj.Exp(),
+    bj.Softplus(),
+    bj.Sigmoid(0.0, 1.0),
+    bj.Sigmoid(-2.0, 5.0),
+    bj.Affine(1.5, 0.7),
+    bj.Ordered(),
+    bj.StickBreaking(),
+]
+
+
+@pytest.mark.parametrize("b", BIJS, ids=lambda b: type(b).__name__ + str(id(b) % 97))
+def test_roundtrip(b):
+    x = jnp.array([0.3, -0.5, 1.2, 0.0])
+    y = b.forward(x)
+    x2 = b.inverse(y)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x), atol=1e-5)
+
+
+@pytest.mark.parametrize("b", BIJS, ids=lambda b: type(b).__name__ + str(id(b) % 97))
+def test_fldj_vs_autodiff(b):
+    x = jnp.array([0.3, -0.5, 1.2, 0.15])
+    if isinstance(b, bj.StickBreaking):
+        J = jax.jacfwd(lambda v: b.forward(v)[:-1])(x)
+    else:
+        J = jax.jacfwd(b.forward)(x)
+    want = float(jnp.linalg.slogdet(J)[1])
+    got = float(b.forward_log_det_jacobian(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_stickbreaking_simplex():
+    sb = bj.StickBreaking()
+    x = jax.random.normal(jax.random.PRNGKey(0), (7, 4))
+    y = sb.forward(x)
+    assert y.shape == (7, 5)
+    np.testing.assert_allclose(np.asarray(jnp.sum(y, -1)), np.ones(7), atol=1e-6)
+    assert (np.asarray(y) > 0).all()
+
+
+def test_ordered_is_ordered():
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 5))
+    y = bj.Ordered().forward(x)
+    assert (np.diff(np.asarray(y), axis=-1) > 0).all()
+
+
+@pytest.mark.parametrize("dist,expected", [
+    (dists.Normal(0, 1), bj.Identity),
+    (dists.Gamma(1, 1), bj.Exp),
+    (dists.Beta(1, 1), bj.Sigmoid),
+    (dists.Uniform(-1, 1), bj.Sigmoid),
+    (dists.Dirichlet(jnp.ones(3)), bj.StickBreaking),
+])
+def test_bijector_for(dist, expected):
+    assert isinstance(bj.bijector_for(dist), expected)
+
+
+def test_bijector_for_discrete_raises():
+    with pytest.raises(ValueError):
+        bj.bijector_for(dists.Poisson(1.0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(hnp.arrays(np.float64, (5,), elements=hst.floats(-4, 4)))
+def test_stickbreaking_roundtrip_property(x):
+    sb = bj.StickBreaking()
+    xj = jnp.asarray(x)
+    x2 = sb.inverse(sb.forward(xj))
+    np.testing.assert_allclose(np.asarray(x2), x, atol=1e-4)

@@ -1,0 +1,203 @@
+"""PPL core: traces, typify, contexts, linking, early rejection, queries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as st
+
+from repro import (DefaultContext, LikelihoodContext, MiniBatchContext,
+                   PriorContext, factor, missing, model, observe, reject_if,
+                   sample, typify)
+from repro.core.queries import prob
+from repro.dists import (Categorical, HalfNormal, InverseGamma, MvNormalDiag,
+                         Normal, Poisson)
+
+
+@model
+def linreg(X, y):
+    w = sample("w", MvNormalDiag(jnp.zeros(3), jnp.ones(3)))
+    s = sample("s", InverseGamma(2.0, 3.0))
+    observe("y", Normal(X @ w, jnp.sqrt(s)), y)
+
+
+@pytest.fixture(scope="module")
+def lin_data():
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (20, 3))
+    y = X @ jnp.array([1.0, -2.0, 0.5]) + 0.1
+    return X, y
+
+
+def test_untyped_then_typed_equal_logp(lin_data):
+    X, y = lin_data
+    m = linreg(X, y)
+    uvi = m.untyped_trace(jax.random.PRNGKey(1))
+    tvi = typify(uvi)
+    lp_untyped = m.logjoint_untyped(uvi.as_dict())
+    lp_typed = float(jax.jit(m.logjoint)(tvi))
+    np.testing.assert_allclose(lp_untyped, lp_typed, rtol=1e-5)
+
+
+def test_logjoint_matches_scipy(lin_data):
+    X, y = lin_data
+    m = linreg(X, y)
+    tvi = m.typed_varinfo(jax.random.PRNGKey(1))
+    d = tvi.as_dict()
+    w0, s0 = np.asarray(d["w"]), float(d["s"])
+    want = (st.norm(0, 1).logpdf(w0).sum()
+            + st.invgamma(2, scale=3).logpdf(s0)
+            + st.norm(np.asarray(X) @ w0, np.sqrt(s0)).logpdf(np.asarray(y)).sum())
+    np.testing.assert_allclose(float(m.logjoint(tvi)), want, rtol=1e-4)
+
+
+def test_contexts_decompose(lin_data):
+    X, y = lin_data
+    m = linreg(X, y)
+    tvi = m.typed_varinfo(jax.random.PRNGKey(2))
+    joint = float(m.logjoint(tvi))
+    pri = float(m.logprior(tvi))
+    lik = float(m.loglikelihood(tvi))
+    np.testing.assert_allclose(pri + lik, joint, rtol=1e-5)
+    mb = float(m.logp_with_context(tvi, MiniBatchContext(scale=3.0)))
+    np.testing.assert_allclose(mb, pri + 3.0 * lik, rtol=1e-5)
+
+
+def test_prior_context_subset(lin_data):
+    X, y = lin_data
+    m = linreg(X, y)
+    tvi = m.typed_varinfo(jax.random.PRNGKey(2))
+    pri_w = float(m.logprior(tvi, vars=frozenset({"w"})))
+    w0 = np.asarray(tvi["w"])
+    np.testing.assert_allclose(pri_w, st.norm(0, 1).logpdf(w0).sum(), rtol=1e-4)
+
+
+def test_linked_density_includes_jacobian(lin_data):
+    X, y = lin_data
+    m = linreg(X, y)
+    linked = m.typed_varinfo(jax.random.PRNGKey(3)).link()
+    f = jax.jit(m.make_logdensity_fn(linked))
+    u = linked.flat()
+    lp_unc = float(f(u))
+    lp_con = float(m.logjoint(linked.invlink()))
+    u_s = float(np.asarray(linked.raw_value("s")))  # Exp bijector: fldj = u
+    np.testing.assert_allclose(lp_unc, lp_con + u_s, rtol=1e-5)
+
+
+def test_flat_roundtrip(lin_data):
+    X, y = lin_data
+    m = linreg(X, y)
+    linked = m.typed_varinfo(jax.random.PRNGKey(4)).link()
+    v = linked.flat()
+    linked2 = linked.replace_flat(v + 0.0)
+    np.testing.assert_allclose(np.asarray(linked2.flat()), np.asarray(v))
+    assert linked2.num_flat == v.shape[0] == 4
+
+
+def test_grouped_indexed_sites():
+    @model
+    def loopy(n):
+        tot = 0.0
+        for i in range(n):
+            tot = tot + sample(f"x[{i}]", Normal(float(i), 1.0))
+        observe("y", Normal(tot, 1.0), 1.5)
+
+    m = loopy(4)
+    tvi = m.typed_varinfo(jax.random.PRNGKey(5))
+    assert tvi.raw_value("x").shape == (4,)
+    lp_typed = float(jax.jit(m.logjoint)(tvi))
+    d = {f"x[{i}]": float(tvi.raw_value("x")[i]) for i in range(4)}
+    np.testing.assert_allclose(lp_typed, m.logjoint_untyped(d), rtol=1e-5)
+    # linked/grouped path
+    linked = tvi.link()
+    f = jax.jit(m.make_logdensity_fn(linked))
+    assert np.isfinite(float(f(linked.flat())))
+
+
+def test_missing_arg_becomes_parameter():
+    @model
+    def gen(y):
+        mu = sample("mu", Normal(0.0, 1.0))
+        observe("y", Normal(mu, 1.0), y)
+
+    m = gen()  # y unbound -> missing -> parameter
+    uvi = m.untyped_trace(jax.random.PRNGKey(6))
+    assert "y" in uvi and "mu" in uvi
+
+
+def test_early_rejection_eager_aborts_body():
+    hits = []
+
+    @model
+    def guarded():
+        x = sample("x", Normal(0.0, 1.0))
+        reject_if(x < 10.0)  # always rejects
+        hits.append(1)
+
+    m = guarded()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(7)).link()
+    n0 = len(hits)
+    lp = float(m._eval_logp(tvi, DefaultContext(), eager=True))
+    assert np.isneginf(lp)
+    assert len(hits) == n0  # body after guard never ran
+
+
+def test_early_rejection_compiled_masks():
+    @model
+    def guarded():
+        x = sample("x", Normal(0.0, 1.0))
+        reject_if(x < 10.0)
+
+    m = guarded()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(8)).link()
+    f = jax.jit(m.make_logdensity_fn(tvi))
+    assert np.isneginf(float(f(tvi.flat())))
+
+
+def test_factor_counts_as_likelihood():
+    @model
+    def fm():
+        sample("x", Normal(0.0, 1.0))
+        factor("extra", jnp.asarray(-3.5))
+
+    m = fm()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(9))
+    lik = float(m.loglikelihood(tvi))
+    np.testing.assert_allclose(lik, -3.5, rtol=1e-6)
+    pri = float(m.logprior(tvi))
+    x0 = float(tvi["x"])
+    np.testing.assert_allclose(pri, st.norm(0, 1).logpdf(x0), rtol=1e-4)
+    mb = float(m.logp_with_context(tvi, MiniBatchContext(scale=2.0)))
+    np.testing.assert_allclose(mb, pri + 2.0 * (-3.5), rtol=1e-5)
+
+
+# ---- probability queries (paper §3.5 examples) ---------------------------
+def test_query_likelihood():
+    lp = prob("X = jnp.array([[1.0, 2.0, 0.0]]), y = jnp.array([2.0]) "
+              "| w = w0, s = 1.0, model = m",
+              w0=jnp.array([0.5, 0.0, 0.0]), m=linreg)
+    np.testing.assert_allclose(float(lp), st.norm(0.5, 1.0).logpdf(2.0),
+                               rtol=1e-5)
+
+
+def test_query_prior(lin_data):
+    X, y = lin_data
+    lp = prob("w = jnp.array([1.0, 1.0, 0.0]), s = 1.0 | model = m",
+              m=linreg(X, y))
+    want = (st.norm(0, 1).logpdf([1.0, 1.0, 0.0]).sum()
+            + st.invgamma(2, scale=3).logpdf(1.0))
+    np.testing.assert_allclose(float(lp), want, rtol=1e-4)
+
+
+def test_query_joint():
+    lp = prob("X = jnp.array([[1.0, 2.0, 0.0]]), y = jnp.array([2.0]), "
+              "w = jnp.array([0.0, 0.0, 0.0]), s = 1.0 | model = m", m=linreg)
+    want = (st.norm(0, 1).logpdf([0.0, 0.0, 0.0]).sum()
+            + st.invgamma(2, scale=3).logpdf(1.0) + st.norm(0, 1).logpdf(2.0))
+    np.testing.assert_allclose(float(lp), want, rtol=1e-4)
+
+
+def test_query_chain_posterior_predictive():
+    chain = {"w": np.zeros((5, 3)), "s": np.ones(5)}
+    lp = prob("X = jnp.array([[1.0, 1.0, 0.0]]), y = jnp.array([2.0]) "
+              "| chain = c, model = m", c=chain, m=linreg)
+    np.testing.assert_allclose(float(lp), st.norm(0, 1).logpdf(2.0), rtol=1e-4)

@@ -1,0 +1,115 @@
+"""Distribution log-probs vs scipy + sampling moments + pytree round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as st
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+
+from repro import dists
+
+CASES = [
+    (lambda: dists.Normal(1.0, 2.0), 0.7, st.norm(1, 2)),
+    (lambda: dists.Gamma(2.0, 3.0), 0.9, st.gamma(2, scale=1 / 3)),
+    (lambda: dists.InverseGamma(2.0, 3.0), 0.9, st.invgamma(2, scale=3)),
+    (lambda: dists.Beta(2.0, 3.0), 0.4, st.beta(2, 3)),
+    (lambda: dists.StudentT(4.0, 1.0, 2.0), 0.3, st.t(4, loc=1, scale=2)),
+    (lambda: dists.LogNormal(0.5, 1.5), 0.8, st.lognorm(1.5, scale=np.exp(0.5))),
+    (lambda: dists.Exponential(2.0), 0.7, st.expon(scale=0.5)),
+    (lambda: dists.Cauchy(1.0, 2.0), 0.3, st.cauchy(1, 2)),
+    (lambda: dists.Laplace(1.0, 2.0), 0.3, st.laplace(1, 2)),
+    (lambda: dists.Uniform(-1.0, 3.0), 0.5, st.uniform(-1, 4)),
+    (lambda: dists.HalfNormal(2.0), 0.9, st.halfnorm(scale=2)),
+    (lambda: dists.HalfCauchy(2.0), 0.9, st.halfcauchy(scale=2)),
+    (lambda: dists.LogisticDist(1.0, 2.0), 0.4, st.logistic(1, 2)),
+]
+
+
+@pytest.mark.parametrize("mk,x,ref", CASES, ids=lambda c: str(c)[:24])
+def test_logpdf_vs_scipy(mk, x, ref):
+    d = mk()
+    np.testing.assert_allclose(float(d.log_prob(x)), ref.logpdf(x), rtol=2e-5)
+
+
+DISCRETE = [
+    (lambda: dists.Poisson(3.5), 2, st.poisson(3.5)),
+    (lambda: dists.Bernoulli(0.3), 1, st.bernoulli(0.3)),
+    (lambda: dists.Binomial(10, 0.4), 3, st.binom(10, 0.4)),
+]
+
+
+@pytest.mark.parametrize("mk,x,ref", DISCRETE, ids=lambda c: str(c)[:24])
+def test_logpmf_vs_scipy(mk, x, ref):
+    d = mk()
+    np.testing.assert_allclose(float(d.log_prob(x)), ref.logpmf(x), rtol=2e-5)
+
+
+def test_bernoulli_logits_matches_probs():
+    logit = 0.73
+    a = dists.BernoulliLogits(logit)
+    b = dists.Bernoulli(float(jax.nn.sigmoid(logit)))
+    for x in (0, 1):
+        np.testing.assert_allclose(float(a.log_prob(x)), float(b.log_prob(x)),
+                                   rtol=1e-5)
+
+
+def test_dirichlet_vs_scipy():
+    d = dists.Dirichlet(jnp.array([1.0, 2.0, 3.0]))
+    x = np.array([0.2, 0.3, 0.5])
+    np.testing.assert_allclose(float(d.log_prob(x)),
+                               st.dirichlet([1, 2, 3]).logpdf(x), rtol=1e-5)
+
+
+def test_categorical():
+    c = dists.Categorical(jnp.log(jnp.array([0.2, 0.3, 0.5])))
+    np.testing.assert_allclose(float(c.log_prob(2)), np.log(0.5), rtol=1e-6)
+    # batched
+    logits = jnp.log(jnp.array([[0.2, 0.8], [0.6, 0.4]]))
+    c2 = dists.Categorical(logits)
+    lp = c2.log_prob(jnp.array([1, 0]))
+    np.testing.assert_allclose(np.asarray(lp), np.log([0.8, 0.6]), rtol=1e-6)
+
+
+def test_mvnormal_diag_vs_scipy():
+    d = dists.MvNormalDiag(jnp.array([1.0, -1.0]), jnp.array([2.0, 0.5]))
+    x = np.array([0.3, 0.1])
+    want = st.multivariate_normal([1, -1], np.diag([4.0, 0.25])).logpdf(x)
+    np.testing.assert_allclose(float(d.log_prob(x)), want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mk,mean,std", [
+    (lambda: dists.Normal(2.0, 3.0), 2.0, 3.0),
+    (lambda: dists.Gamma(4.0, 2.0), 2.0, 1.0),
+    (lambda: dists.Exponential(2.0), 0.5, 0.5),
+    (lambda: dists.Beta(2.0, 2.0), 0.5, np.sqrt(1 / 20)),
+    (lambda: dists.Poisson(4.0), 4.0, 2.0),
+])
+def test_sample_moments(mk, mean, std):
+    d = mk()
+    s = np.asarray(d.sample(jax.random.PRNGKey(0), (20000,)), dtype=np.float64)
+    assert abs(s.mean() - mean) < 5 * std / np.sqrt(len(s)) + 0.02
+    assert abs(s.std() - std) < 0.1 * std + 0.02
+
+
+def test_pytree_roundtrip_preserves_logprob():
+    d = dists.Gamma(2.0, 3.0)
+    leaves, treedef = jax.tree_util.tree_flatten(d)
+    d2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert float(d2.log_prob(1.1)) == float(d.log_prob(1.1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(loc=hst.floats(-5, 5), scale=hst.floats(0.1, 5), x=hst.floats(-10, 10))
+def test_normal_logpdf_property(loc, scale, x):
+    got = float(dists.Normal(loc, scale).log_prob(x))
+    np.testing.assert_allclose(got, st.norm(loc, scale).logpdf(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(conc=hst.floats(0.2, 8), rate=hst.floats(0.2, 8), x=hst.floats(0.05, 20))
+def test_gamma_logpdf_property(conc, rate, x):
+    got = float(dists.Gamma(conc, rate).log_prob(x))
+    np.testing.assert_allclose(got, st.gamma(conc, scale=1 / rate).logpdf(x),
+                               rtol=1e-4, atol=1e-5)

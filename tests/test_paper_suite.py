@@ -1,0 +1,60 @@
+"""The 8 Table-1 models: DSL log-density == hand-written Stan analogue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.infer.hmc import make_chain_fn
+from repro.models import paper_suite as ps
+
+
+@pytest.mark.parametrize("name", ps.MODEL_NAMES)
+def test_dsl_matches_handwritten(name):
+    pm = ps.build(name)
+    tvi = pm.model.typed_varinfo(jax.random.PRNGKey(42)).link()
+    f_dsl = jax.jit(pm.model.make_logdensity_fn(tvi))
+    f_hand = jax.jit(pm.handwritten)
+    dim = int(tvi.flat().shape[0])
+    for i in range(3):
+        q = 0.4 * jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                                    (dim,))
+        a, b = float(f_dsl(q)), float(f_hand(q))
+        np.testing.assert_allclose(a, b, rtol=5e-5, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", ps.MODEL_NAMES)
+def test_gradients_match(name):
+    pm = ps.build(name)
+    tvi = pm.model.typed_varinfo(jax.random.PRNGKey(42)).link()
+    f_dsl = pm.model.make_logdensity_fn(tvi)
+    dim = int(tvi.flat().shape[0])
+    q = 0.2 * jax.random.normal(jax.random.PRNGKey(1), (dim,))
+    ga = np.asarray(jax.grad(f_dsl)(q))
+    gb = np.asarray(jax.grad(pm.handwritten)(q))
+    assert np.isfinite(ga).all()
+    np.testing.assert_allclose(ga, gb, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", ps.MODEL_NAMES)
+def test_short_hmc_runs(name):
+    """Short chains on every Table-1 model: finite logp, some acceptance."""
+    pm = ps.build(name)
+    key = jax.random.PRNGKey(0)
+    tvi = pm.model.typed_varinfo(jax.random.PRNGKey(42)).link()
+    f = pm.model.make_logdensity_fn(tvi)
+    chain = jax.jit(make_chain_fn(f, 10, pm.step_size, pm.n_leapfrog,
+                                  collect=False))
+    qf, logps, accs = chain(key, tvi.flat())
+    assert np.isfinite(float(logps[-1]))
+    assert np.isfinite(np.asarray(qf)).all()
+
+
+def test_gauss_unknown_posterior_is_correct():
+    """End-to-end statistical check on one Table-1 model (conjugate-ish)."""
+    pm = ps.build("gauss_unknown", n=2000)
+    from repro.infer import HMC
+    ch = HMC(step_size=0.03, n_leapfrog=8).run(
+        jax.random.PRNGKey(3), pm.model, num_samples=800)
+    y = pm.data["y"]
+    assert abs(ch.mean("m") - y.mean()) < 0.05
+    assert abs(np.sqrt(ch.mean("s")) - y.std()) < 0.05

@@ -1,0 +1,156 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Invariants under test:
+  * bijector round-trips: forward(inverse(x)) == x on every support
+  * context algebra: logjoint == logprior + loglikelihood;
+    MiniBatchContext is LINEAR in the likelihood weight
+  * change of variables: linked density == constrained density + log|detJ|
+  * typify: element sites group into one stacked site; idempotent lookups
+  * data pipeline: host shards tile the global batch for every divisor
+  * elastic planner: produced meshes are always valid
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import model, observe, sample
+from repro.bijectors import bijector_for
+from repro.core.contexts import (DefaultContext, LikelihoodContext,
+                                 MiniBatchContext, PriorContext)
+from repro.data import SyntheticTokens
+from repro.dists import (Beta, Exponential, Gamma, HalfNormal, LogNormal,
+                         Normal, Uniform)
+from repro.runtime import plan_elastic_mesh
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# bijectors
+# ---------------------------------------------------------------------------
+DISTS = [
+    lambda a, b: Normal(a, abs(b) + 0.1),
+    lambda a, b: LogNormal(a, abs(b) + 0.1),
+    lambda a, b: Gamma(abs(a) + 0.5, abs(b) + 0.5),
+    lambda a, b: Exponential(abs(b) + 0.1),
+    lambda a, b: Beta(abs(a) + 0.5, abs(b) + 0.5),
+    lambda a, b: Uniform(a, a + abs(b) + 0.5),
+    lambda a, b: HalfNormal(abs(b) + 0.1),
+]
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, len(DISTS) - 1),
+       st.floats(-2, 2), st.floats(-2, 2),
+       st.floats(-3, 3))
+def test_bijector_roundtrip(di, a, b, u):
+    d = DISTS[di](a, b)
+    bij = bijector_for(d)
+    x = bij.forward(jnp.asarray(u))
+    u2 = bij.inverse(x)
+    x2 = bij.forward(u2)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, len(DISTS) - 1), st.floats(-2, 2), st.floats(-2, 2),
+       st.floats(-2.5, 2.5))
+def test_change_of_variables_density(di, a, b, u):
+    """linked logp(u) == logp(x) + log|J| with x = forward(u)."""
+    d = DISTS[di](a, b)
+    bij = bijector_for(d)
+    u = jnp.asarray(u)
+    x = bij.forward(u)
+    lp_linked = d.log_prob(x) + bij.forward_log_det_jacobian(u)
+    # numerically: d/du via central difference. eps must beat f32
+    # round-off on forward() values (eps^2 truncation vs 1e-7/eps noise)
+    eps = 1e-2
+    jac = (bij.forward(u + eps) - bij.forward(u - eps)) / (2 * eps)
+    lp_expected = d.log_prob(x) + jnp.log(jnp.abs(jac) + 1e-30)
+    np.testing.assert_allclose(np.asarray(lp_linked),
+                               np.asarray(lp_expected),
+                               rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# context algebra
+# ---------------------------------------------------------------------------
+@model
+def _gdemo(y):
+    s2 = sample("s2", Gamma(2.0, 3.0))
+    mu = sample("mu", Normal(0.0, jnp.sqrt(s2)))
+    observe("y", Normal(mu, jnp.sqrt(s2)), y)
+
+
+@settings(**SETTINGS)
+@given(st.floats(0.05, 5.0), st.floats(-3, 3),
+       st.lists(st.floats(-3, 3), min_size=1, max_size=6),
+       st.floats(0.1, 50.0))
+def test_context_algebra(s2, mu, ys, scale):
+    m = _gdemo(jnp.asarray(ys, jnp.float32))
+    vals = {"s2": jnp.asarray(s2), "mu": jnp.asarray(mu)}
+    lj = float(m.logp_with_context(vals, DefaultContext()))
+    lp = float(m.logp_with_context(vals, PriorContext()))
+    ll = float(m.logp_with_context(vals, LikelihoodContext()))
+    lmb = float(m.logp_with_context(vals, MiniBatchContext(scale=scale)))
+    assert np.isclose(lj, lp + ll, rtol=1e-5, atol=1e-5)
+    assert np.isclose(lmb, lp + scale * ll, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# typify grouping
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(2, 8))
+def test_typify_groups_element_sites(n):
+    @model
+    def loopy():
+        tot = 0.0
+        for i in range(n):
+            tot = tot + sample(f"x[{i}]", Normal(0.0, 1.0))
+        observe("y", Normal(tot, 1.0), 0.5)
+
+    m = loopy()
+    uvi = m.untyped_trace(jax.random.PRNGKey(0))
+    assert len(uvi.names()) == n
+    tvi = m.typed_varinfo(jax.random.PRNGKey(0))
+    # grouped into ONE stacked site named "x"
+    assert len(tvi.metas) == 1
+    assert tvi.metas[0].name == "x"
+    assert tvi.metas[0].shape == (n,)
+    assert tvi.metas[0].grouped and tvi.metas[0].nelems == n
+    # element lookup matches the untyped trace
+    for i in range(n):
+        np.testing.assert_allclose(np.asarray(tvi[f"x[{i}]"]),
+                                   np.asarray(uvi[f"x[{i}]"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 1000),
+       st.integers(0, 2 ** 31 - 1))
+def test_data_shards_tile(num_hosts, step, seed):
+    ds = SyntheticTokens(vocab=128, seq_len=8, global_batch=8, seed=seed)
+    full = ds.batch(step)["tokens"]
+    parts = [ds.batch(step, h, num_hosts)["tokens"] for h in range(num_hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+# ---------------------------------------------------------------------------
+# elastic planner
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(8, 512), st.sampled_from([4, 8, 16, 32]),
+       st.sampled_from([64, 128, 256]))
+def test_elastic_plan_always_valid(n_devices, old_model, global_batch):
+    plan = plan_elastic_mesh(n_devices, old_model, global_batch)
+    used = int(np.prod(plan.shape))
+    assert used <= n_devices
+    assert plan.dropped_devices == n_devices - used
+    data = plan.shape[0] if len(plan.shape) == 2 else plan.shape[0] * plan.shape[1]
+    assert global_batch % data == 0
