@@ -9,9 +9,14 @@ The container is CPU-only, so Pallas wall-clock is meaningless
   ``cost_analysis()`` of the reference) vs the kernel's structural
   traffic (inputs once + outputs once, accumulators in VMEM) — the
   quantity the fused kernel is designed to cut.
+* fused vs per-site log-joint wall clock: both backends lower through
+  XLA on this host, so the fused flat-block path (one launch per family)
+  can be timed honestly against the per-site reference path on the
+  Table-1 models.
 """
 from __future__ import annotations
 
+import time
 from typing import List
 
 import jax
@@ -22,6 +27,8 @@ import numpy as np
 def _bytes_of(fn, *args) -> float:
     c = jax.jit(fn).lower(*args).compile()
     ca = c.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
     return float(ca.get("bytes accessed", 0.0))
 
 
@@ -102,9 +109,76 @@ def bench_ssd(lines: List[str]) -> None:
         f"traffic_cut={xla_bytes / max(kernel_bytes, 1):.2f}x")
 
 
+def _time_call(fn, *args, n: int = 20, trials: int = 5, warmup: int = 3) -> float:
+    """Best-of-``trials`` mean per-call seconds (min defeats CPU noise)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best
+
+
+def bench_fused_vs_reference_logjoint(lines: List[str]) -> None:
+    """Fused flat-block log-joint vs per-site reference on Table-1 models.
+
+    Compares compiled value-and-grad per-call time of the two backends of
+    ``Model.make_logdensity_fn`` (the HMC inner loop) — the acceptance
+    criterion is fused not slower than per-site. Because a shared CPU host
+    has a ~5-10% timing noise floor, the bench also checks whether XLA
+    compiled both backends to the SAME optimised program
+    (``same_hlo=True`` — structurally impossible for fused to be slower);
+    wall clock is the arbiter only when the programs differ.
+    """
+    import re
+
+    from repro.models import paper_suite
+    key = jax.random.PRNGKey(0)
+
+    def canon_hlo(compiled_fn) -> str:
+        # strip metadata (source locations differ between backends)
+        return re.sub(r", metadata=\{[^}]*\}", "", compiled_fn.as_text())
+
+    for name in ("gaussian_10k", "gauss_unknown", "logreg"):
+        pm = paper_suite.build(name)
+        tvi = pm.model.typed_varinfo(key).link()
+        q0 = tvi.flat()
+        compiled = {}
+        for backend in ("reference", "fused"):
+            f = pm.model.make_logdensity_fn(tvi, backend=backend)
+            compiled[backend] = jax.jit(jax.value_and_grad(f)).lower(q0).compile()
+        same = canon_hlo(compiled["fused"]) == canon_hlo(compiled["reference"])
+
+        def cost(compiled_fn):
+            ca = compiled_fn.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+            return (float(ca.get("flops", 0.0)),
+                    float(ca.get("bytes accessed", 0.0)))
+
+        flops = {b: cost(g)[0] for b, g in compiled.items()}
+        # interleave trials so host noise hits both backends equally
+        times = {b: float("inf") for b in compiled}
+        for _ in range(5):
+            for b, g in compiled.items():
+                times[b] = min(times[b], _time_call(g, q0, trials=1) * 1e6)
+        ratio = times["fused"] / max(times["reference"], 1e-9)
+        flop_ratio = flops["fused"] / max(flops["reference"], 1e-9)
+        lines.append(
+            f"kernels/fused_logjoint/{name},{times['fused']:.1f},"
+            f"reference_us={times['reference']:.1f};"
+            f"fused_over_reference={ratio:.2f};"
+            f"flops_ratio={flop_ratio:.3f};same_hlo={same}")
+
+
 def run() -> List[str]:
     lines = ["name,us_per_call,derived"]
     bench_fused_logpdf(lines)
+    bench_fused_vs_reference_logjoint(lines)
     bench_flash(lines)
     bench_ssd(lines)
     return lines

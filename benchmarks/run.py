@@ -3,10 +3,14 @@
   table1          — paper Table 1: static HMC (4 leapfrog, 2000 iters) on
                     the 8 benchmark models; typed vs handwritten vs untyped
   typed_ablation  — §2.2 claim isolated: per-call log-density cost
-  kernels         — per-kernel allclose + HBM-traffic accounting
+  kernels         — per-kernel allclose + HBM-traffic accounting, plus
+                    fused vs per-site log-joint wall clock
   roofline        — 3-term roofline per dry-run cell (needs dryrun JSONL)
+  multichain      — the vmapped ``run_chains`` driver: N chains of static
+                    HMC as one jit(vmap(...)) program (enabled by
+                    ``--chains N``; also runnable via --only multichain)
 
-``python -m benchmarks.run [--fast] [--only SECTION]``
+``python -m benchmarks.run [--fast] [--only SECTION] [--chains N]``
 (--fast cuts table1 to 200 iterations for quick regression runs)
 """
 from __future__ import annotations
@@ -16,12 +20,37 @@ import sys
 import time
 
 
+def run_multichain(num_chains: int, fast: bool = False):
+    """Exercise ``repro.infer.run_chains``: N-chain static HMC, one vmap."""
+    import jax
+
+    from repro.infer import HMC, run_chains, split_rhat
+    from repro.models import paper_suite
+
+    pm = paper_suite.build("gauss_unknown")
+    num_samples = 200 if fast else 1000
+    kernel = HMC(step_size=pm.step_size, n_leapfrog=pm.n_leapfrog,
+                 adapt_step_size=True)
+    t0 = time.perf_counter()
+    ch = run_chains(jax.random.PRNGKey(0), pm.model, kernel,
+                    num_samples=num_samples, num_warmup=num_samples // 2,
+                    num_chains=num_chains)
+    wall = time.perf_counter() - t0
+    per_draw_us = wall / (num_chains * num_samples) * 1e6
+    rhat = split_rhat(ch["m"])
+    yield (f"multichain/gauss_unknown/hmc_x{num_chains},{per_draw_us:.1f},"
+           f"draws={ch['m'].shape};wall_s={wall:.2f};rhat_m={rhat:.3f}")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--fast", action="store_true")
     p.add_argument("--only", default=None,
                    choices=("table1", "typed_ablation", "kernels",
-                            "roofline"))
+                            "roofline", "multichain"))
+    p.add_argument("--chains", type=int, default=None, metavar="N",
+                   help="run the vmapped multi-chain driver with N chains "
+                        "(adds the 'multichain' section)")
     args = p.parse_args(argv)
 
     sections = []
@@ -34,6 +63,10 @@ def main(argv=None) -> int:
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         sections.append(("roofline", roofline.run))
+    if args.only == "multichain" or args.chains is not None:
+        n = args.chains if args.chains is not None else 4
+        sections.append(
+            ("multichain", lambda: run_multichain(n, fast=args.fast)))
     if args.only in (None, "table1"):
         from benchmarks import table1
         iters = 200 if args.fast else 2000

@@ -11,6 +11,13 @@ stack; the tilde primitive dispatches to the innermost one. Three modes:
 * ``LinkedEvaluator``  — replay given UNCONSTRAINED values; applies the
                          per-site bijector and accumulates log|det J|
                          (Stan-style HMC space). jit-compatible.
+* ``FusedEvaluator`` / ``FusedLinkedEvaluator`` — same semantics, but
+  fusible same-family sites (Normal/MvNormalDiag, BernoulliLogits,
+  Categorical) are GATHERED during the replay and evaluated afterwards as
+  one flat block per family via ``kernels.fused_logpdf.site_block_sum`` —
+  a single kernel launch instead of one logpdf+reduce per site. This is
+  the flat-buffer hot path every compiled density routes through by
+  default (``Model.logjoint(..., backend="fused")``).
 
 Early rejection (paper §3.3): ``reject()`` / ``reject_if(cond)``. In eager
 mode this aborts the model run (a real compute shortcut, like Julia's
@@ -32,8 +39,8 @@ from repro.core.varname import VarName
 
 __all__ = [
     "Interpreter", "Sampler", "Evaluator", "LinkedEvaluator",
-    "EarlyRejectError", "current_interpreter", "push_interpreter",
-    "pop_interpreter",
+    "FusedEvaluator", "FusedLinkedEvaluator", "EarlyRejectError",
+    "current_interpreter", "push_interpreter", "pop_interpreter",
 ]
 
 _STACK: List["Interpreter"] = []
@@ -75,6 +82,15 @@ class Interpreter:
     # -- accumulation ----------------------------------------------------------
     def accum(self, lp, observed: bool) -> None:
         (self._lp_lik_parts if observed else self._lp_prior_parts).append(lp)
+
+    def site_logp(self, dist, value, observed: bool) -> None:
+        """Accumulate one tilde site's total log-probability.
+
+        The reference implementation evaluates the site immediately
+        (``dist.total_log_prob``); the fused evaluators override this to
+        gather fusible sites into per-family flat blocks instead.
+        """
+        self.accum(dist.total_log_prob(value), observed=observed)
 
     @property
     def logp(self):
@@ -171,12 +187,12 @@ class Evaluator(Interpreter):
     def tilde(self, vn: VarName, dist, value, observed: bool):
         if observed:
             if self.ctx.wants_site(vn.sym, True):
-                self.accum(dist.total_log_prob(value), observed=True)
+                self.site_logp(dist, value, observed=True)
             return value
         val = self._lookup(vn)
         self.new_dists.append(dist)
         if self.ctx.wants_site(vn.sym, False):
-            self.accum(dist.total_log_prob(val), observed=False)
+            self.site_logp(dist, val, observed=False)
         return val
 
 
@@ -200,7 +216,7 @@ class LinkedEvaluator(Interpreter):
     def tilde(self, vn: VarName, dist, value, observed: bool):
         if observed:
             if self.ctx.wants_site(vn.sym, True):
-                self.accum(dist.total_log_prob(value), observed=True)
+                self.site_logp(dist, value, observed=True)
             return value
         i = self.tvi.site_index(vn.sym)
         u_site = self.tvi.values[i]
@@ -215,7 +231,112 @@ class LinkedEvaluator(Interpreter):
         bij = bijector_for(dist)
         x = bij.forward(u)
         if self.ctx.wants_site(vn.sym, False):
-            lp = dist.total_log_prob(x) + bij.forward_log_det_jacobian(u)
-            self.accum(lp, observed=False)
+            self.site_logp(dist, x, observed=False)
+            self.accum(bij.forward_log_det_jacobian(u), observed=False)
         self.constrained[seen_key] = x
         return x
+
+
+# ---------------------------------------------------------------------------
+# Fused flat-buffer evaluation (the compiled log-joint hot path)
+# ---------------------------------------------------------------------------
+def _fusible_parts(dist, value):
+    """Flatten one fusible tilde site into a family-tagged segment.
+
+    Returns ``(family, family_key, segment, extra_lp)`` where ``segment``
+    is a tuple of equal-layout 1-D (or ``(N, C)`` for categorical) arrays
+    ready to be concatenated with other segments of the same family, and
+    ``extra_lp`` is an optional scalar accumulated immediately (per-site
+    analytic terms that must NOT enter the fused block). Returns ``None``
+    when the distribution has no fused kernel (the site then evaluates
+    through the per-site reference path).
+
+    Normal/MvNormalDiag sites are STANDARDISED here: the block carries
+    ``z = (x - loc) / scale`` and ``extra_lp`` carries ``-sum(log scale)``,
+    so scalar-parameter sites never materialise broadcast parameter arrays
+    (XLA folds the broadcast log-sum into ``N * log(scale)``) and the TPU
+    kernel streams one array instead of three.
+    """
+    from repro.dists.continuous import Normal
+    from repro.dists.discrete import BernoulliLogits, Categorical
+    from repro.dists.multivariate import MvNormalDiag
+
+    t = type(dist)
+    fdtype = jnp.result_type(float)
+    if t is Normal or t is MvNormalDiag:
+        loc = jnp.asarray(dist.loc, fdtype)
+        scale = jnp.asarray(dist.scale if t is Normal else dist.scale_diag,
+                            fdtype)
+        x = jnp.asarray(value, fdtype)
+        shape = jnp.broadcast_shapes(jnp.shape(x), jnp.shape(loc),
+                                     jnp.shape(scale))
+        z = jnp.broadcast_to((x - loc) / scale, shape).ravel()
+        extra = -jnp.sum(jnp.broadcast_to(jnp.log(scale), shape))
+        return ("std_normal", None, (z,), extra)
+    if t is BernoulliLogits:
+        logits = jnp.asarray(dist.logits, fdtype)
+        y = jnp.asarray(value)
+        shape = jnp.broadcast_shapes(jnp.shape(logits), jnp.shape(y))
+        seg = (jnp.broadcast_to(logits, shape).ravel(),
+               jnp.broadcast_to(y, shape).astype(fdtype).ravel())
+        return ("bernoulli_logits", None, seg, None)
+    if t is Categorical:
+        logits = jnp.asarray(dist.logits, fdtype)
+        if logits.ndim < 1:
+            return None
+        c = logits.shape[-1]
+        labels = jnp.asarray(value, jnp.int32)
+        bshape = jnp.broadcast_shapes(logits.shape[:-1], labels.shape)
+        seg = (jnp.broadcast_to(logits, bshape + (c,)).reshape(-1, c),
+               jnp.broadcast_to(labels, bshape).reshape(-1))
+        return ("categorical_logits", c, seg, None)
+    return None
+
+
+class _FusedAccumMixin:
+    """Gather fusible sites into per-family flat blocks during the replay.
+
+    ``site_logp`` defers fusible sites into ``self._site_blocks`` keyed by
+    ``(family, family_key, observed)``; reading ``logp`` first flushes every
+    block through ``kernels.fused_logpdf.site_block_sum`` — ONE launch per
+    (family, observed) pair for the whole model — and then delegates to the
+    base accumulator, so context weighting, early rejection and ``factor``
+    terms compose exactly as on the reference path. Flushing is
+    incremental: ``get_logp()`` mid-model flushes what has been gathered so
+    far and later sites keep gathering.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._site_blocks = {}
+
+    def site_logp(self, dist, value, observed: bool) -> None:
+        parts = None if self.eager else _fusible_parts(dist, value)
+        if parts is None:
+            super().site_logp(dist, value, observed)
+            return
+        family, fkey, seg, extra_lp = parts
+        self._site_blocks.setdefault((family, fkey, observed), []).append(seg)
+        if extra_lp is not None:
+            self.accum(extra_lp, observed=observed)
+
+    def _flush_site_blocks(self) -> None:
+        if not self._site_blocks:
+            return
+        from repro.kernels.fused_logpdf import ops
+        blocks, self._site_blocks = self._site_blocks, {}
+        for (family, _fkey, observed), segs in blocks.items():
+            self.accum(ops.site_block_sum(family, segs), observed=observed)
+
+    @property
+    def logp(self):
+        self._flush_site_blocks()
+        return super().logp
+
+
+class FusedEvaluator(_FusedAccumMixin, Evaluator):
+    """``Evaluator`` with the fused flat-block log-joint backend."""
+
+
+class FusedLinkedEvaluator(_FusedAccumMixin, LinkedEvaluator):
+    """``LinkedEvaluator`` with the fused flat-block log-joint backend."""

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core.contexts import (Context, DefaultContext, LikelihoodContext,
                                  PriorContext)
 from repro.core.interpreters import (EarlyRejectError, Evaluator,
+                                     FusedEvaluator, FusedLinkedEvaluator,
                                      LinkedEvaluator, Sampler,
                                      pop_interpreter, push_interpreter)
 from repro.core.primitives import missing
@@ -106,25 +107,39 @@ class Model:
         return typify(self.untyped_trace(key, init_strategy=init_strategy))
 
     # -- densities ----------------------------------------------------------------
-    def _eval_logp(self, values, ctx: Context, eager: bool = False) -> jax.Array:
+    def _eval_logp(self, values, ctx: Context, eager: bool = False,
+                   backend: str = "fused") -> jax.Array:
+        if backend not in ("fused", "reference"):
+            raise ValueError(f"unknown density backend '{backend}'; "
+                             "expected 'fused' or 'reference'")
+        fused = backend == "fused" and not eager
         if isinstance(values, TypedVarInfo) and values.linked:
-            it = LinkedEvaluator(values, ctx=ctx, eager=eager)
+            cls = FusedLinkedEvaluator if fused else LinkedEvaluator
         else:
-            it = Evaluator(values, ctx=ctx, eager=eager)
+            cls = FusedEvaluator if fused else Evaluator
+        it = cls(values, ctx=ctx, eager=eager)
         _, it = self._run(it)
         return it.logp
 
-    def logjoint(self, values) -> jax.Array:
-        return self._eval_logp(values, DefaultContext())
+    def logjoint(self, values, backend: str = "fused") -> jax.Array:
+        """Log joint density of ``values`` under this model.
 
-    def logprior(self, values, vars=None) -> jax.Array:
-        return self._eval_logp(values, PriorContext(vars))
+        ``backend="fused"`` (default) gathers same-family tilde sites into
+        flat blocks and evaluates each with one ``fused_logpdf`` launch;
+        ``backend="reference"`` evaluates per site (the oracle path the
+        parity tests compare against).
+        """
+        return self._eval_logp(values, DefaultContext(), backend=backend)
 
-    def loglikelihood(self, values) -> jax.Array:
-        return self._eval_logp(values, LikelihoodContext())
+    def logprior(self, values, vars=None, backend: str = "fused") -> jax.Array:
+        return self._eval_logp(values, PriorContext(vars), backend=backend)
 
-    def logp_with_context(self, values, ctx: Context) -> jax.Array:
-        return self._eval_logp(values, ctx)
+    def loglikelihood(self, values, backend: str = "fused") -> jax.Array:
+        return self._eval_logp(values, LikelihoodContext(), backend=backend)
+
+    def logp_with_context(self, values, ctx: Context,
+                          backend: str = "fused") -> jax.Array:
+        return self._eval_logp(values, ctx, backend=backend)
 
     # -- eager (UNTYPED) density: the paper's slow general path ---------------
     def logjoint_untyped(self, values_dict: Dict[str, Any]) -> float:
@@ -140,18 +155,37 @@ class Model:
 
     # -- compiled flat log-density for gradient-based inference -----------------
     def make_logdensity_fn(self, tvi_linked: TypedVarInfo,
-                           ctx: Optional[Context] = None) -> Callable:
-        """R^num_flat -> log p(forward(u)) + log|det J|, jit-compiled.
+                           ctx: Optional[Context] = None,
+                           backend: str = "fused") -> Callable:
+        """Build the flat unconstrained log-density ``R^num_flat -> R``.
 
-        The returned function is specialised on the typed trace structure —
-        the paper's TypedVarInfo-enables-fast-machine-code mechanism, with
-        XLA in the role of the Julia compiler."""
+        Parameters
+        ----------
+        tvi_linked : TypedVarInfo
+            Linked typed trace whose :class:`~repro.core.varinfo.FlatLayout`
+            fixes the buffer layout the returned function is specialised on.
+        ctx : Context, optional
+            Accumulation context (default joint).
+        backend : {"fused", "reference"}
+            ``"fused"`` evaluates same-family site blocks through
+            ``kernels.fused_logpdf`` in one launch per family — the hot
+            path every sampler in ``repro.infer`` compiles. ``"reference"``
+            keeps the per-site evaluation (oracle/ablation path).
+
+        Returns
+        -------
+        callable
+            ``flat_u -> log p(forward(flat_u)) + log|det J|``; jit/grad/
+            vmap-compatible, specialised on the typed trace structure — the
+            paper's TypedVarInfo-enables-fast-machine-code mechanism, with
+            XLA in the role of the Julia compiler.
+        """
         assert tvi_linked.linked
         ctx = ctx if ctx is not None else DefaultContext()
 
         def logdensity(flat_u):
             tvi = tvi_linked.replace_flat(flat_u)
-            return self._eval_logp(tvi, ctx)
+            return self._eval_logp(tvi, ctx, backend=backend)
 
         return logdensity
 

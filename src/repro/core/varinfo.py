@@ -17,10 +17,20 @@ ranges.
 
 ``link``/``invlink`` move values between the constrained support and the
 unconstrained reals (Stan-style) using the per-site stored distribution.
+
+The typed trace additionally carries a ``FlatLayout``: static per-site
+slice/shape metadata, precomputed once at ``typify`` time, describing where
+every site lives inside ONE flat buffer (both the constrained and the
+unconstrained layout). ``flat``/``replace_flat`` are driven entirely by this
+layout, so the whole-trace <-> R^n conversion that gradient-based inference
+hammers (every leapfrog step) is a fixed sequence of static slices — no
+name lookups, no per-site shape negotiation — and the flat-buffer log-joint
+backend (``repro.kernels.fused_logpdf``) can address site blocks by offset.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -30,7 +40,8 @@ import numpy as np
 from repro.bijectors import bijector_for
 from repro.core.varname import VarName
 
-__all__ = ["UntypedVarInfo", "TypedVarInfo", "typify", "SiteMeta"]
+__all__ = ["UntypedVarInfo", "TypedVarInfo", "typify", "SiteMeta",
+           "SiteSlice", "FlatLayout", "layout_for"]
 
 _DISCRETE_SUPPORTS = ("discrete", "nonnegative_int", "binary")
 
@@ -107,11 +118,84 @@ def _meta_for(sym: str, value, dist, grouped: bool, nelems: int) -> SiteMeta:
     return SiteMeta(sym, shape, dtype, support, grouped, nelems, unc_shape)
 
 
+class SiteSlice(NamedTuple):
+    """Static flat-buffer coordinates of one site (see ``FlatLayout``).
+
+    Attributes
+    ----------
+    name : str
+        Site symbol (grouped element sites share one symbol).
+    offset, size, shape :
+        Start offset, element count and array shape of this site's block in
+        the CONSTRAINED flat buffer (``linked=False`` layout).
+    unc_offset, unc_size, unc_shape :
+        The same coordinates in the UNCONSTRAINED flat buffer
+        (``linked=True`` layout; e.g. a K-simplex occupies K-1 slots).
+    dtype : str
+        Concrete dtype of the stored (constrained) value.
+    support : str
+        Support tag of the site's distribution (``"real"``, ``"positive"``,
+        ``"simplex"``, ...), fixed at ``typify`` time.
+    """
+
+    name: str
+    offset: int
+    size: int
+    shape: Tuple[int, ...]
+    unc_offset: int
+    unc_size: int
+    unc_shape: Tuple[int, ...]
+    dtype: str
+    support: str
+
+
+class FlatLayout(NamedTuple):
+    """Whole-trace flat-buffer layout: one ``SiteSlice`` per site.
+
+    ``size``/``unc_size`` are the total lengths of the constrained and
+    unconstrained flat vectors. The layout is pure static metadata (ints,
+    strings, tuples) — it is computed once per trace TYPE and is safe to
+    close over inside ``jax.jit``.
+    """
+
+    sites: Tuple[SiteSlice, ...]
+    size: int
+    unc_size: int
+
+    def slice_of(self, sym: str) -> SiteSlice:
+        for s in self.sites:
+            if s.name == sym:
+                return s
+        raise KeyError(f"no site '{sym}' in layout")
+
+
+@functools.lru_cache(maxsize=None)
+def layout_for(metas: Tuple[SiteMeta, ...]) -> FlatLayout:
+    """Compute the ``FlatLayout`` for a tuple of site metadata.
+
+    Cached on the (hashable) metadata tuple: every ``TypedVarInfo`` sharing
+    one trace type shares one layout object — the paper's "pay the analysis
+    once, then run specialised code" economics applied to buffer packing.
+    """
+    sites, off, unc_off = [], 0, 0
+    for m in metas:
+        n = int(np.prod(m.shape)) if m.shape else 1
+        un = int(np.prod(m.unc_shape)) if m.unc_shape else 1
+        sites.append(SiteSlice(m.name, off, n, m.shape, unc_off, un,
+                               m.unc_shape, m.dtype, m.support))
+        off += n
+        unc_off += un
+    return FlatLayout(tuple(sites), off, unc_off)
+
+
 class TypedVarInfo:
     """Concretely-typed trace: pytree of per-site values + distributions.
 
     ``linked=False``: values live on the constrained support.
     ``linked=True``: values are unconstrained reals (HMC space).
+
+    ``self.layout`` holds the precomputed :class:`FlatLayout`; all flat
+    vector plumbing below is driven by it.
     """
 
     def __init__(self, values: Tuple, dists: Tuple, metas: Tuple[SiteMeta, ...],
@@ -120,6 +204,7 @@ class TypedVarInfo:
         self.dists = tuple(dists)
         self.metas = tuple(metas)
         self.linked = bool(linked)
+        self.layout = layout_for(self.metas)
         self._index = {m.name: i for i, m in enumerate(self.metas)}
 
     # -- lookups -------------------------------------------------------------
@@ -183,23 +268,56 @@ class TypedVarInfo:
     # -- flat vector interface (HMC / optimisers) -----------------------------
     @property
     def num_flat(self) -> int:
-        return int(sum(int(np.prod(m.unc_shape if self.linked else m.shape))
-                       for m in self.metas))
+        """Length of ``flat()``: ``layout.unc_size`` when linked else
+        ``layout.size`` (the two layouts differ for e.g. simplex sites)."""
+        return self.layout.unc_size if self.linked else self.layout.size
 
     def flat(self) -> jax.Array:
-        parts = [jnp.ravel(v).astype(jnp.result_type(float)) for v in self.values]
+        """Pack the trace into one flat float vector.
+
+        Returns
+        -------
+        jax.Array, shape ``(num_flat,)``
+            Site blocks concatenated in layout order. When ``linked``, each
+            block is reshaped through its ``unc_shape``; otherwise through
+            ``shape`` — exactly the layout :meth:`replace_flat` unpacks, so
+            ``replace_flat(flat())`` round-trips for linked AND unlinked
+            traces. A value whose size disagrees with the layout raises
+            immediately (shape drift caught at the boundary, not inside a
+            sampler).
+        """
+        parts = []
+        for v, s in zip(self.values, self.layout.sites):
+            shape = s.unc_shape if self.linked else s.shape
+            parts.append(jnp.reshape(v, shape).ravel()
+                         .astype(jnp.result_type(float)))
         if not parts:
             return jnp.zeros((0,))
         return jnp.concatenate(parts)
 
     def replace_flat(self, vec: jax.Array) -> "TypedVarInfo":
-        out, off = [], 0
-        for v, m in zip(self.values, self.metas):
-            shape = m.unc_shape if self.linked else m.shape
-            n = int(np.prod(shape)) if shape else 1
-            chunk = vec[off:off + n].reshape(shape)
-            out.append(chunk.astype(v.dtype) if not self.linked else chunk)
-            off += n
+        """Unpack a flat vector into a new trace (inverse of :meth:`flat`).
+
+        Parameters
+        ----------
+        vec : jax.Array, shape ``(num_flat,)``
+            Flat buffer laid out per ``self.layout`` (unconstrained layout
+            when ``linked``, constrained layout otherwise).
+
+        Returns
+        -------
+        TypedVarInfo
+            Same structure with values sliced out of ``vec``. Unlinked
+            traces cast each block back to the site's concrete dtype.
+        """
+        out = []
+        for s in self.layout.sites:
+            if self.linked:
+                off, n, shape = s.unc_offset, s.unc_size, s.unc_shape
+                out.append(vec[off:off + n].reshape(shape))
+            else:
+                off, n, shape = s.offset, s.size, s.shape
+                out.append(vec[off:off + n].reshape(shape).astype(s.dtype))
         return TypedVarInfo(tuple(out), self.dists, self.metas, self.linked)
 
     def replace_values(self, values: Tuple) -> "TypedVarInfo":

@@ -1,6 +1,14 @@
-"""repro.infer — inference algorithms over typed traces."""
+"""repro.infer — inference algorithms over typed traces.
+
+Every sampler compiles the SAME fused flat-buffer log-density
+(``Model.make_logdensity_fn(..., backend="fused")``); ``run_chains`` is
+the vmapped multi-chain driver that runs any of them many-chains-at-once
+on one device.
+"""
 from repro.infer.advi import ADVI, ADVIResult
-from repro.infer.chains import Chain, effective_sample_size, split_rhat
+from repro.infer.chains import (Chain, TransitionKernel,
+                                effective_sample_size, package_draws,
+                                run_chains, split_rhat)
 from repro.infer.hmc import HMC, DualAveraging
 from repro.infer.map_estimate import MAP
 from repro.infer.mh import RWMH
@@ -9,5 +17,6 @@ from repro.infer.sgld import SGLD, make_sgld_step
 
 __all__ = [
     "HMC", "NUTS", "RWMH", "SGLD", "make_sgld_step", "ADVI", "ADVIResult",
-    "MAP", "Chain", "effective_sample_size", "split_rhat", "DualAveraging",
+    "MAP", "Chain", "TransitionKernel", "effective_sample_size",
+    "package_draws", "run_chains", "split_rhat", "DualAveraging",
 ]

@@ -45,13 +45,14 @@ class ADVI:
     num_mc: int = 8
     lr: float = 0.05
     num_steps: int = 1000
+    backend: str = "fused"  # log-density backend (see make_logdensity_fn)
 
     def run(self, key, m: Model, ctx: Optional[Context] = None,
             init_varinfo: Optional[TypedVarInfo] = None) -> ADVIResult:
         k_init, k_run = jax.random.split(key)
         tvi = (init_varinfo if init_varinfo is not None
                else m.typed_varinfo(k_init)).link()
-        logdensity = m.make_logdensity_fn(tvi, ctx=ctx)
+        logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
         dim = int(tvi.flat().shape[0])
 
         def neg_elbo(params, key):

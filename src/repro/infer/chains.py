@@ -1,11 +1,26 @@
-"""Chain container + MCMC diagnostics (ESS, split-R-hat, summaries)."""
+"""Chain container, MCMC diagnostics, and the vmapped multi-chain driver.
+
+Three layers:
+
+* ``Chain`` + ``effective_sample_size`` / ``split_rhat`` — posterior draw
+  storage with a leading chain axis and the standard mixing diagnostics.
+* ``TransitionKernel`` — the protocol every MCMC sampler exposes through
+  ``make_kernel(logdensity, dim)``: pure ``init``/``warm``/``finalize``/
+  ``step`` functions over a flat unconstrained state, with no Python state,
+  so a whole chain is one ``lax.scan`` and MANY chains are one ``vmap``.
+* ``run_chains`` — the many-chains-on-one-device driver (GenJAX-style):
+  builds the model's fused flat log-density ONCE, vmaps the transition
+  kernel over a leading chain axis with per-chain PRNG keys and jittered
+  inits, and packages the stacked draws back through the typed trace.
+"""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import numpy as np
 
-__all__ = ["Chain", "effective_sample_size", "split_rhat"]
+__all__ = ["Chain", "TransitionKernel", "effective_sample_size",
+           "package_draws", "run_chains", "split_rhat"]
 
 
 class Chain:
@@ -107,3 +122,148 @@ def split_rhat(x: np.ndarray) -> float:
     b = n2 * chain_means.var(ddof=1)
     var_plus = (n2 - 1.0) / n2 * w + b / n2
     return float(np.sqrt(var_plus / max(w, 1e-300)))
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-chain driver
+# ---------------------------------------------------------------------------
+class TransitionKernel(NamedTuple):
+    """Pure-function MCMC transition kernel over a flat unconstrained state.
+
+    Samplers build one via ``make_kernel(logdensity, dim)``. All four
+    fields are jit/vmap-compatible closures:
+
+    Attributes
+    ----------
+    init : callable
+        ``q0 (dim,) -> state``; evaluates whatever the sampler caches
+        (log-density, gradient, adaptation state) at the initial position.
+    warm : callable
+        ``(state, t, key) -> state``; one warmup transition at iteration
+        ``t`` (a float scalar), including any step-size adaptation.
+    finalize : callable
+        ``state -> state``; freezes adapted quantities (e.g. the
+        dual-averaged step size) before sampling starts. ``run_chains``
+        calls it only after a non-empty warmup — with ``num_warmup=0``
+        the configured (unadapted) settings are kept.
+    step : callable
+        ``(state, key) -> (state, out)`` with ``out`` a dict of per-draw
+        arrays that MUST contain ``"q"`` (the flat position, shape
+        ``(dim,)``) and ``"logp"``; extra keys become ``Chain.stats``.
+    """
+
+    init: Callable
+    warm: Callable
+    finalize: Callable
+    step: Callable
+
+
+def package_draws(tvi_linked, qs, stats: Optional[Dict[str, Any]] = None) -> Chain:
+    """Map flat unconstrained draws back to constrained named arrays.
+
+    Parameters
+    ----------
+    tvi_linked : TypedVarInfo
+        Linked typed trace fixing the flat layout of ``qs``.
+    qs : array, shape ``(num_chains, num_samples, num_flat)``
+        Unconstrained draws.
+    stats : dict of arrays, optional
+        Per-draw sampler statistics, each ``(num_chains, num_samples, ...)``.
+
+    Returns
+    -------
+    Chain
+        Draws keyed by site symbol, each
+        ``(num_chains, num_samples) + site.shape`` on the constrained
+        support (one jitted double-vmap of ``replace_flat().invlink()``).
+    """
+    import jax
+
+    def to_constrained(q):
+        return tvi_linked.replace_flat(q).invlink().as_dict()
+
+    draws = jax.jit(jax.vmap(jax.vmap(to_constrained)))(qs)
+    return Chain({k: np.asarray(v) for k, v in draws.items()},
+                 stats={k: np.asarray(v) for k, v in (stats or {}).items()})
+
+
+def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
+               num_chains: int = 4, init_varinfo=None, init_jitter: float = 1.0,
+               backend: str = "fused") -> Chain:
+    """Run ``num_chains`` MCMC chains as ONE vmap-compiled program.
+
+    The model's log-density is built once from the typed trace (fused
+    flat-buffer backend by default) and shared by every chain; the whole
+    warmup+sampling loop of all chains is a single ``jit(vmap(...))`` —
+    chains advance in lockstep on one device instead of running serially.
+
+    Parameters
+    ----------
+    key : jax PRNG key
+        Master key; split into one independent key per chain (plus one for
+        trace discovery and init jitter).
+    model : repro.core.model.Model
+        Bound model to sample from.
+    kernel : HMC | NUTS | RWMH
+        Any sampler exposing ``make_kernel(logdensity, dim)``.
+    num_samples : int
+        Post-warmup draws per chain.
+    num_warmup : int
+        Warmup (adaptation) iterations per chain, discarded.
+    num_chains : int
+        Number of parallel chains (the leading axis of every result).
+    init_varinfo : TypedVarInfo, optional
+        Typed trace to initialise from; discovered from the prior if absent.
+    init_jitter : float
+        Half-width of the per-chain Uniform jitter around the discovery
+        draw in UNCONSTRAINED space (overdispersed inits make split-R-hat
+        meaningful). ``0.0`` starts every chain at the same point.
+    backend : {"fused", "reference"}
+        Log-density backend (see ``Model.make_logdensity_fn``).
+
+    Returns
+    -------
+    Chain
+        Draws of shape ``(num_chains, num_samples) + site.shape`` per site;
+        ``stats`` holds ``logp`` and the kernel's extras (accept_prob, ...).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    k_init, k_run = jax.random.split(key)
+    tvi = (init_varinfo if init_varinfo is not None
+           else model.typed_varinfo(k_init)).link()
+    logdensity = model.make_logdensity_fn(tvi, backend=backend)
+    dim = int(tvi.num_flat)
+    kern = kernel.make_kernel(logdensity, dim)
+
+    q0 = tvi.flat()
+    q0s = jnp.broadcast_to(q0, (num_chains, dim))
+    if init_jitter:
+        q0s = q0s + jax.random.uniform(
+            jax.random.fold_in(k_init, 7), (num_chains, dim),
+            minval=-init_jitter, maxval=init_jitter)
+
+    def one_chain(ckey, q0):
+        state = kern.init(q0)
+        if num_warmup > 0:
+            wkeys = jax.random.split(jax.random.fold_in(ckey, 1), num_warmup)
+            ts = jnp.arange(num_warmup, dtype=jnp.float32)
+
+            def warm_body(s, inp):
+                t, k = inp
+                return kern.warm(s, t, k), None
+
+            state, _ = jax.lax.scan(warm_body, state, (ts, wkeys))
+            # freeze adapted quantities only when adaptation actually ran:
+            # dual-averaging's smoothed iterate starts at exp(0)=1.0, which
+            # would silently replace the configured step size otherwise
+            state = kern.finalize(state)
+        skeys = jax.random.split(jax.random.fold_in(ckey, 2), num_samples)
+        _, outs = jax.lax.scan(kern.step, state, skeys)
+        return outs
+
+    chain_keys = jax.random.split(k_run, num_chains)
+    outs = jax.jit(jax.vmap(one_chain))(chain_keys, q0s)
+    qs = outs.pop("q")
+    return package_draws(tvi, qs, stats=outs)

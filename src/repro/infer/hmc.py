@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.contexts import Context
 from repro.core.model import Model
 from repro.core.varinfo import TypedVarInfo
-from repro.infer.chains import Chain
+from repro.infer.chains import Chain, TransitionKernel, package_draws
 
 __all__ = ["HMC", "DualAveraging"]
 
@@ -67,6 +67,29 @@ def _leapfrog(logdensity_and_grad: Callable, q, p, grad, step_size, n_steps: int
 
     (q, p, grad), logps = jax.lax.scan(body, (q, p, grad), None, length=n_steps)
     return q, p, logps[-1], grad
+
+
+def hmc_transition(ld_and_grad: Callable, q, logp, grad, step_size,
+                   key, n_leapfrog: int):
+    """One Metropolis-corrected HMC transition with unit metric.
+
+    Returns ``(q, logp, grad, accept_prob, accepted)``; shared by
+    ``HMC.run`` and the ``TransitionKernel`` built by ``HMC.make_kernel``
+    so both paths run the exact same arithmetic.
+    """
+    k_mom, k_acc = jax.random.split(key)
+    p0 = jax.random.normal(k_mom, q.shape)
+    q_new, p_new, logp_new, grad_new = _leapfrog(
+        ld_and_grad, q, p0, grad, step_size, n_leapfrog)
+    h0 = -logp + 0.5 * jnp.sum(p0 * p0)
+    h1 = -logp_new + 0.5 * jnp.sum(p_new * p_new)
+    log_accept = jnp.minimum(0.0, h0 - h1)
+    log_accept = jnp.where(jnp.isnan(log_accept), -jnp.inf, log_accept)
+    accept = jnp.log(jax.random.uniform(k_acc, ())) < log_accept
+    q = jnp.where(accept, q_new, q)
+    logp = jnp.where(accept, logp_new, logp)
+    grad = jnp.where(accept, grad_new, grad)
+    return q, logp, grad, jnp.exp(log_accept), accept
 
 
 def make_chain_fn(logdensity: Callable, num_samples: int, step_size: float,
@@ -116,6 +139,7 @@ class HMC:
     n_leapfrog: int = 4
     adapt_step_size: bool = False
     target_accept: float = 0.8
+    backend: str = "fused"  # log-density backend (see make_logdensity_fn)
 
     # -- typed, fully-compiled path ------------------------------------------
     def run(self, key, m: Model, num_samples: int,
@@ -127,7 +151,7 @@ class HMC:
         k_init, k_run = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
         tvi = (init_varinfo if init_varinfo is not None
                else m.typed_varinfo(k_init)).link()
-        logdensity = m.make_logdensity_fn(tvi, ctx=ctx)
+        logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
 
         def ld_and_grad(q):
             return jax.value_and_grad(logdensity)(q)
@@ -135,19 +159,8 @@ class HMC:
         da = DualAveraging(target_accept=self.target_accept)
 
         def hmc_step(q, logp, grad, step_size, key):
-            k_mom, k_acc = jax.random.split(key)
-            p0 = jax.random.normal(k_mom, q.shape)
-            q_new, p_new, logp_new, grad_new = _leapfrog(
-                ld_and_grad, q, p0, grad, step_size, self.n_leapfrog)
-            h0 = -logp + 0.5 * jnp.sum(p0 * p0)
-            h1 = -logp_new + 0.5 * jnp.sum(p_new * p_new)
-            log_accept = jnp.minimum(0.0, h0 - h1)
-            log_accept = jnp.where(jnp.isnan(log_accept), -jnp.inf, log_accept)
-            accept = jnp.log(jax.random.uniform(k_acc, ())) < log_accept
-            q = jnp.where(accept, q_new, q)
-            logp = jnp.where(accept, logp_new, logp)
-            grad = jnp.where(accept, grad_new, grad)
-            return q, logp, grad, jnp.exp(log_accept), accept
+            return hmc_transition(ld_and_grad, q, logp, grad, step_size, key,
+                                  self.n_leapfrog)
 
         def one_chain(key, q0):
             logp0, grad0 = ld_and_grad(q0)
@@ -168,7 +181,10 @@ class HMC:
                 ts = jnp.arange(num_warmup, dtype=jnp.float32)
                 (q0, logp0, grad0, da_state), _ = jax.lax.scan(
                     warm_body, (q0, logp0, grad0, da_state), (ts, keys))
-            final_step = jnp.exp(da_state[1]) if self.adapt_step_size \
+            # use the dual-averaged step only if adaptation actually ran:
+            # the smoothed iterate starts at exp(0)=1.0, not step_size
+            final_step = jnp.exp(da_state[1]) \
+                if (self.adapt_step_size and num_warmup > 0) \
                 else jnp.asarray(self.step_size)
 
             def body(carry, key):
@@ -205,15 +221,63 @@ class HMC:
 
     def _package(self, m: Model, tvi_linked: TypedVarInfo, qs, logps, accs) -> Chain:
         """Map flat unconstrained draws back to constrained named arrays."""
+        return package_draws(tvi_linked, qs,
+                             stats={"logp": logps, "accept_prob": accs})
 
-        def to_constrained(q):
-            vi = tvi_linked.replace_flat(q).invlink()
-            return vi.as_dict()
+    # -- TransitionKernel protocol (run_chains driver) -------------------------
+    def make_kernel(self, logdensity: Callable, dim: int) -> TransitionKernel:
+        """Build the pure HMC :class:`TransitionKernel` for ``run_chains``.
 
-        # vmap over (chains, samples)
-        draws = jax.jit(jax.vmap(jax.vmap(to_constrained)))(qs)
-        return Chain({k: np.asarray(v) for k, v in draws.items()},
-                     stats={"logp": logps, "accept_prob": accs})
+        Parameters
+        ----------
+        logdensity : callable
+            Flat unconstrained log-density ``(dim,) -> scalar`` (usually
+            ``Model.make_logdensity_fn`` output — the fused hot path).
+        dim : int
+            Length of the flat unconstrained state.
+
+        Returns
+        -------
+        TransitionKernel
+            State ``(q, logp, grad, da_state, eps)``; ``step`` emits
+            ``{"q", "logp", "accept_prob"}`` per draw. Warmup runs
+            dual-averaging adaptation when ``adapt_step_size``.
+        """
+        del dim  # the state shape is carried by q itself
+
+        def ld_and_grad(q):
+            return jax.value_and_grad(logdensity)(q)
+
+        da = DualAveraging(target_accept=self.target_accept)
+
+        def init(q0):
+            logp0, grad0 = ld_and_grad(q0)
+            eps = jnp.asarray(self.step_size)
+            return (q0, logp0, grad0, da.init(eps), eps)
+
+        def warm(state, t, key):
+            q, logp, grad, da_state, eps = state
+            cur = jnp.exp(da_state[0]) if self.adapt_step_size else eps
+            q, logp, grad, acc, _ = hmc_transition(
+                ld_and_grad, q, logp, grad, cur, key, self.n_leapfrog)
+            if self.adapt_step_size:
+                da_state = da.update(da_state, acc, t)
+            return (q, logp, grad, da_state, eps)
+
+        def finalize(state):
+            q, logp, grad, da_state, eps = state
+            if self.adapt_step_size:
+                eps = jnp.exp(da_state[1])
+            return (q, logp, grad, da_state, eps)
+
+        def step(state, key):
+            q, logp, grad, da_state, eps = state
+            q, logp, grad, acc, _ = hmc_transition(
+                ld_and_grad, q, logp, grad, eps, key, self.n_leapfrog)
+            out = {"q": q, "logp": logp, "accept_prob": acc}
+            return (q, logp, grad, da_state, eps), out
+
+        return TransitionKernel(init, warm, finalize, step)
 
     # -- untyped eager path (the paper's slow general mode) -------------------
     def run_untyped(self, key, m: Model, num_samples: int,

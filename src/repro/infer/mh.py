@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.model import Model
 from repro.core.varinfo import TypedVarInfo
-from repro.infer.chains import Chain
+from repro.infer.chains import Chain, TransitionKernel
 from repro.infer.hmc import HMC
 
 __all__ = ["RWMH"]
@@ -29,6 +29,43 @@ class RWMH:
     """Gaussian random-walk MH in the unconstrained space."""
 
     proposal_scale: float = 0.1
+    backend: str = "fused"  # log-density backend (see make_logdensity_fn)
+
+    # -- TransitionKernel protocol (run_chains driver) -------------------------
+    def make_kernel(self, logdensity, dim: int) -> TransitionKernel:
+        """Build the pure RWMH :class:`TransitionKernel` for ``run_chains``.
+
+        State is ``(q, logp)``; warmup transitions are plain MH steps (no
+        adaptation); ``step`` emits ``{"q", "logp", "accept_prob"}``.
+        """
+
+        def init(q0):
+            return (q0, logdensity(q0))
+
+        def transition(state, key):
+            q, logp = state
+            k_prop, k_acc = jax.random.split(key)
+            q_new = q + self.proposal_scale * jax.random.normal(k_prop, (dim,))
+            logp_new = logdensity(q_new)
+            log_acc = jnp.where(jnp.isnan(logp_new), -jnp.inf, logp_new - logp)
+            accept = jnp.log(jax.random.uniform(k_acc, ())) < log_acc
+            q = jnp.where(accept, q_new, q)
+            logp = jnp.where(accept, logp_new, logp)
+            return (q, logp), accept
+
+        def warm(state, t, key):
+            del t
+            state, _ = transition(state, key)
+            return state
+
+        def step(state, key):
+            state, accept = transition(state, key)
+            q, logp = state
+            out = {"q": q, "logp": logp,
+                   "accept_prob": accept.astype(jnp.float32)}
+            return state, out
+
+        return TransitionKernel(init, warm, lambda s: s, step)
 
     def run(self, key, m: Model, num_samples: int,
             num_warmup: int = 0,
@@ -37,7 +74,7 @@ class RWMH:
         k_init, k_run = jax.random.split(key)
         tvi = (init_varinfo if init_varinfo is not None
                else m.typed_varinfo(k_init)).link()
-        logdensity = m.make_logdensity_fn(tvi)
+        logdensity = m.make_logdensity_fn(tvi, backend=self.backend)
         dim = int(tvi.flat().shape[0])
 
         def mh_step(carry, key):

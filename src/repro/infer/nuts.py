@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.model import Model
 from repro.core.varinfo import TypedVarInfo
-from repro.infer.chains import Chain
+from repro.infer.chains import Chain, TransitionKernel
 from repro.infer.hmc import DualAveraging, HMC
 
 __all__ = ["NUTS"]
@@ -59,17 +59,15 @@ class NUTS:
     max_depth: int = 10
     adapt_step_size: bool = True
     target_accept: float = 0.8
+    backend: str = "fused"  # log-density backend (see make_logdensity_fn)
 
-    def run(self, key, m: Model, num_samples: int, num_warmup: int = 500,
-            init_varinfo: Optional[TypedVarInfo] = None,
-            num_chains: int = 1) -> Chain:
-        k_init, k_run = jax.random.split(key)
-        tvi = (init_varinfo if init_varinfo is not None
-               else m.typed_varinfo(k_init)).link()
-        logdensity = m.make_logdensity_fn(tvi)
-        ld_grad = jax.value_and_grad(logdensity)
-        dim = int(tvi.flat().shape[0])
-        da = DualAveraging(target_accept=self.target_accept)
+    def _build_step(self, ld_grad, dim: int):
+        """Build the single compiled NUTS transition.
+
+        Returns ``nuts_step(q0, logp0, grad0, eps, key) -> (q, logp, grad,
+        accept_prob, tree_depth, diverging)`` — shared by :meth:`run` and
+        :meth:`make_kernel` so both drivers run identical tree code.
+        """
 
         def one_leapfrog(q, p, grad, eps, direction):
             e = eps * direction
@@ -207,6 +205,60 @@ class NUTS:
             return (out["q_prop"], out["logp_prop"], out["grad_prop"],
                     acc_prob, out["depth"], out["diverging"])
 
+        return nuts_step
+
+    # -- TransitionKernel protocol (run_chains driver) -------------------------
+    def make_kernel(self, logdensity, dim: int) -> TransitionKernel:
+        """Build the pure NUTS :class:`TransitionKernel` for ``run_chains``.
+
+        State is ``(q, logp, grad, da_state, eps)``; ``step`` emits
+        ``{"q", "logp", "accept_prob", "tree_depth"}`` per draw. Warmup
+        runs dual-averaging on the mean subtree acceptance statistic.
+        """
+        ld_grad = jax.value_and_grad(logdensity)
+        nuts_step = self._build_step(ld_grad, dim)
+        da = DualAveraging(target_accept=self.target_accept)
+
+        def init(q0):
+            logp0, grad0 = ld_grad(q0)
+            eps = jnp.asarray(self.step_size)
+            return (q0, logp0, grad0, da.init(eps), eps)
+
+        def warm(state, t, key):
+            q, logp, grad, da_state, eps = state
+            cur = jnp.exp(da_state[0]) if self.adapt_step_size else eps
+            q, logp, grad, acc, _, _ = nuts_step(q, logp, grad, cur, key)
+            if self.adapt_step_size:
+                da_state = da.update(da_state, acc, t)
+            return (q, logp, grad, da_state, eps)
+
+        def finalize(state):
+            q, logp, grad, da_state, eps = state
+            if self.adapt_step_size:
+                eps = jnp.exp(da_state[1])
+            return (q, logp, grad, da_state, eps)
+
+        def step(state, key):
+            q, logp, grad, da_state, eps = state
+            q, logp, grad, acc, depth, _ = nuts_step(q, logp, grad, eps, key)
+            out = {"q": q, "logp": logp, "accept_prob": acc,
+                   "tree_depth": depth}
+            return (q, logp, grad, da_state, eps), out
+
+        return TransitionKernel(init, warm, finalize, step)
+
+    def run(self, key, m: Model, num_samples: int, num_warmup: int = 500,
+            init_varinfo: Optional[TypedVarInfo] = None,
+            num_chains: int = 1) -> Chain:
+        k_init, k_run = jax.random.split(key)
+        tvi = (init_varinfo if init_varinfo is not None
+               else m.typed_varinfo(k_init)).link()
+        logdensity = m.make_logdensity_fn(tvi, backend=self.backend)
+        ld_grad = jax.value_and_grad(logdensity)
+        dim = int(tvi.flat().shape[0])
+        da = DualAveraging(target_accept=self.target_accept)
+        nuts_step = self._build_step(ld_grad, dim)
+
         def one_chain(key, q0):
             logp0, grad0 = ld_grad(q0)
             da_state = da.init(jnp.asarray(self.step_size))
@@ -226,7 +278,10 @@ class NUTS:
                 ts = jnp.arange(num_warmup, dtype=jnp.float32)
                 (q0, logp0, grad0, da_state), _ = jax.lax.scan(
                     warm_body, (q0, logp0, grad0, da_state), (ts, keys))
-            eps = jnp.exp(da_state[1]) if self.adapt_step_size \
+            # dual-averaged step only if adaptation actually ran: the
+            # smoothed iterate starts at exp(0)=1.0, not step_size
+            eps = jnp.exp(da_state[1]) \
+                if (self.adapt_step_size and num_warmup > 0) \
                 else jnp.asarray(self.step_size)
 
             def body(carry, k):

@@ -68,16 +68,19 @@ class SGLD:
 
 
 def make_sgld_step(m: Model, scale: float, sgld: Optional[SGLD] = None,
-                   param_site: str = "params") -> Callable:
+                   param_site: str = "params",
+                   backend: str = "fused") -> Callable:
     """Build a jit-able SGLD step over a model whose minibatch enters as
-    bound data. ``scale`` = N_total / batch_size (MiniBatchContext)."""
+    bound data. ``scale`` = N_total / batch_size (MiniBatchContext);
+    ``backend`` selects the log-joint evaluation path (fused flat-block
+    kernels by default, per-site reference otherwise)."""
     sgld = sgld if sgld is not None else SGLD()
     ctx = MiniBatchContext(scale=scale)
 
     def step(key, params, state, **batch):
         def logjoint(p):
             mm = m.bind(**batch)
-            return mm.logp_with_context({param_site: p}, ctx)
+            return mm.logp_with_context({param_site: p}, ctx, backend=backend)
 
         logp, grads = jax.value_and_grad(logjoint)(params)
         params, state = sgld.step(key, params, grads, state)

@@ -9,10 +9,13 @@ ops.py jit'd wrapper, ref.py pure-jnp oracle):
   fused_logpdf/     fused elementwise-logpdf + reduce for vectorised tilde
                     statements (the paper's HMC hot loop)
 
-``use_fused_logpdf`` switches the PPL's Normal / BernoulliLogits /
-CategoricalLogits ``total_log_prob`` onto the fused kernel; it is OFF by
-default on CPU (interpret mode is for validation, not speed) and is the
-TPU-production path.
+The PPL's compiled densities reach fused_logpdf through
+``site_block_sum`` (the flat-buffer log-joint backend: one launch per
+distribution family per model evaluation — Pallas on TPU, the jnp oracle
+elsewhere). ``use_fused_logpdf`` additionally switches the PPL's Normal /
+BernoulliLogits / Categorical ``total_log_prob`` onto the per-array fused
+kernel; it is OFF by default on CPU (interpret mode is for validation,
+not speed) and is the TPU-production path.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import contextlib
 from repro.kernels.flash_attention import flash_attention_gqa  # noqa: F401
 from repro.kernels.fused_logpdf import (  # noqa: F401
     bernoulli_logits_logpmf_sum, categorical_logits_logpmf_sum,
-    normal_logpdf_sum)
+    normal_logpdf_sum, site_block_sum)
 from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
 
 _FUSED_LOGPDF = False

@@ -1,3 +1,4 @@
 from repro.kernels.fused_logpdf.ops import (  # noqa: F401
-    bernoulli_logits_logpmf_sum, categorical_logits_logpmf_sum,
-    normal_logpdf_sum)
+    SITE_BLOCK_FAMILIES, bernoulli_logits_logpmf_sum,
+    categorical_logits_logpmf_sum, normal_logpdf_sum, site_block_sum,
+    std_normal_logpdf_sum)

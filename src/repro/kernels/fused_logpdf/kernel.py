@@ -28,6 +28,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 LANE = 128
 SUB = 8
 _HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
@@ -40,6 +44,29 @@ def _mask_block(i, block_rows, n_valid):
     cc = jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANE), 1)
     flat = (row0 + rr) * LANE + cc
     return flat < n_valid
+
+
+# ---------------------------------------------------------------------------
+# standard Normal — pre-standardised z = (x - mu) / sigma (see ops.py).
+# Streams ONE array instead of three: the log|sigma| term is accumulated
+# analytically outside, so the kernel only reduces -z^2/2 - log(2 pi)/2.
+# ---------------------------------------------------------------------------
+def _std_normal_kernel(z_ref, o_ref, acc_ref, *, n_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = z_ref[...].astype(jnp.float32)
+    lp = -0.5 * z * z - _HALF_LOG_2PI
+    lp = jnp.where(_mask_block(i, z.shape[0], n_valid), lp, 0.0)
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
 
 
 # ---------------------------------------------------------------------------
@@ -134,11 +161,19 @@ def _reduce_call(kernel, n_inputs: int, rows: int, block_rows: int,
                                memory_space=pltpu.SMEM),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM(acc_shape, jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name=name,
     )
+
+
+def std_normal_sum_2d(z, n_valid: int, block_rows: int, interpret: bool):
+    rows = z.shape[0]
+    kern = functools.partial(_std_normal_kernel, n_valid=n_valid)
+    call = _reduce_call(kern, 1, rows, block_rows, LANE, (SUB, LANE),
+                        None, interpret, "fused_std_normal_logpdf")
+    return call(z)[0, 0]
 
 
 def normal_sum_2d(x, mu, sig, n_valid: int, block_rows: int,
@@ -176,7 +211,7 @@ def categorical_sum_2d(logits, labels, n_valid: int, c_valid: int,
                                memory_space=pltpu.SMEM),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((SUB, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="fused_categorical_logpdf",

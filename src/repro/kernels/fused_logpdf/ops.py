@@ -1,16 +1,31 @@
-"""jit'd wrappers: flatten/pad/broadcast, then call the fused reduce kernels."""
+"""jit'd wrappers: flatten/pad/broadcast, then call the fused reduce kernels.
+
+Two call surfaces:
+
+* ``normal_logpdf_sum`` / ``bernoulli_logits_logpmf_sum`` /
+  ``categorical_logits_logpmf_sum`` — one fused VMEM reduce per array
+  (the original per-distribution entry points).
+* ``site_block_sum`` — the flat-buffer log-joint hot path: ALL same-family
+  tilde sites of one model evaluation, pre-flattened into segments by the
+  fused evaluators, summed in a single launch. On TPU this is the Pallas
+  kernel; elsewhere it falls back to the pure-jnp oracle in ``ref.py``
+  (mathematically identical, still one fused XLA reduction over the
+  concatenated block).
+"""
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_logpdf import kernel as K
+from repro.kernels.fused_logpdf import ref
 
-__all__ = ["normal_logpdf_sum", "bernoulli_logits_logpmf_sum",
-           "categorical_logits_logpmf_sum"]
+__all__ = ["normal_logpdf_sum", "std_normal_logpdf_sum",
+           "bernoulli_logits_logpmf_sum", "categorical_logits_logpmf_sum",
+           "site_block_sum", "SITE_BLOCK_FAMILIES"]
 
 
 def _auto_interpret() -> bool:
@@ -27,12 +42,82 @@ def _to_tiles(x, block_rows: int):
     return flat.reshape(-1, K.LANE), n
 
 
+def std_normal_logpdf_sum(z, *, block_rows: int = 256,
+                          interpret: Optional[bool] = None):
+    """``sum(StdNormal.log_prob(z))`` as one fused single-input reduce.
+
+    The flat-buffer log-joint standardises every Normal site to
+    ``z = (x - loc) / scale`` before fusing, accumulating the
+    ``-sum(log scale)`` Jacobian term analytically — so this kernel
+    streams ONE array (N reads) where ``normal_logpdf_sum`` streams three.
+
+    Parameters
+    ----------
+    z : jax.Array, any shape
+        Standardised values; flattened to 1-D and padded to
+        ``(rows, 128)`` tiles.
+
+    Returns
+    -------
+    jax.Array, scalar float32
+        ``sum(-z^2 / 2 - log(2 pi) / 2)``. Differentiable
+        (analytic custom_vjp: ``dz = -z * g``).
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    z = jnp.asarray(z, jnp.float32)
+    return _std_normal_sum_vjp(z, block_rows, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _std_normal_sum_vjp(z, block_rows, interpret):
+    return _std_normal_sum_impl(z, block_rows=block_rows,
+                                interpret=interpret)
+
+
+def _std_normal_sum_fwd(z, block_rows, interpret):
+    out = _std_normal_sum_impl(z, block_rows=block_rows,
+                               interpret=interpret)
+    return out, z
+
+
+def _std_normal_sum_bwd(block_rows, interpret, z, g):
+    return (g * (-z),)
+
+
+_std_normal_sum_vjp.defvjp(_std_normal_sum_fwd, _std_normal_sum_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _std_normal_sum_impl(z, *, block_rows: int, interpret: bool):
+    z2, n = _to_tiles(z, block_rows)
+    br = min(block_rows, z2.shape[0])
+    return K.std_normal_sum_2d(z2, n, br, interpret)
+
+
 def normal_logpdf_sum(x, loc, scale, *, block_rows: int = 256,
                       interpret: Optional[bool] = None):
-    """sum(Normal(loc, scale).log_prob(x)) as one fused VMEM reduce.
+    """``sum(Normal(loc, scale).log_prob(x))`` as one fused VMEM reduce.
 
-    Differentiable: analytic custom_vjp (elementwise; XLA fuses it), with
-    broadcast handled outside so scalar params get summed cotangents."""
+    Parameters
+    ----------
+    x : jax.Array, any shape
+        Values; flattened to 1-D and padded to ``(rows, 128)`` tiles.
+    loc, scale : jax.Array
+        Broadcastable against ``x`` (scalars and full arrays both fine).
+    block_rows : int
+        Grid row-block size (tile rows reduced per grid step).
+    interpret : bool, optional
+        Run the Pallas kernel in interpret mode (default: auto — on
+        whenever the backend is not TPU).
+
+    Returns
+    -------
+    jax.Array, scalar float32
+        The summed log-density. Differentiable: analytic custom_vjp
+        (elementwise; XLA fuses it), with broadcast handled outside so
+        scalar params get summed cotangents.
+    """
     if interpret is None:
         interpret = _auto_interpret()
     x = jnp.asarray(x, jnp.float32)
@@ -78,8 +163,21 @@ def _normal_sum_impl(x, mu, sig, *, block_rows: int, interpret: bool):
 
 def bernoulli_logits_logpmf_sum(logits, y, *, block_rows: int = 256,
                                 interpret: Optional[bool] = None):
-    """sum over elements of y*logsig(l) + (1-y)*logsig(-l). Differentiable
-    in ``logits`` (analytic: y - sigmoid(l)) and ``y`` (cotangent l)."""
+    """``sum(y * logsig(l) + (1 - y) * logsig(-l))`` as one fused reduce.
+
+    Parameters
+    ----------
+    logits : jax.Array, any shape
+        Bernoulli logits ``l``; flattened/padded like ``normal_logpdf_sum``.
+    y : jax.Array
+        0/1 observations, broadcastable against ``logits``.
+
+    Returns
+    -------
+    jax.Array, scalar float32
+        Summed log-pmf. Differentiable in ``logits`` (analytic:
+        ``y - sigmoid(l)``) and ``y`` (cotangent ``l``).
+    """
     if interpret is None:
         interpret = _auto_interpret()
     logits = jnp.asarray(logits, jnp.float32)
@@ -119,9 +217,23 @@ def _bern_sum_impl(logits, y, *, block_rows: int, interpret: bool):
 
 def categorical_logits_logpmf_sum(logits, labels, *, block_rows: int = 128,
                                   interpret: Optional[bool] = None):
-    """logits (..., C), labels (...) int -> sum log softmax(logits)[labels].
+    """``sum(log softmax(logits)[labels])`` as one fused reduce.
 
-    Differentiable in logits: d = onehot(labels) - softmax(logits)."""
+    Parameters
+    ----------
+    logits : jax.Array, shape ``(..., C)``
+        Unnormalised class scores; reshaped to ``(N, C)`` and padded to
+        lane multiples.
+    labels : jax.Array, shape ``(...)``, int
+        Class indices in ``[0, C)``; leading shape must match ``logits``.
+
+    Returns
+    -------
+    jax.Array, scalar float32
+        Summed log-pmf. Differentiable in ``logits``
+        (``onehot(labels) - softmax(logits)``); labels get a float0
+        cotangent.
+    """
     if interpret is None:
         interpret = _auto_interpret()
     C = logits.shape[-1]
@@ -152,6 +264,88 @@ def _cat_sum_bwd(block_rows, interpret, res, g):
 
 
 _cat_sum_vjp.defvjp(_cat_sum_fwd, _cat_sum_bwd)
+
+
+# ---------------------------------------------------------------------------
+# site_block_sum — the flat-buffer log-joint entry point
+# ---------------------------------------------------------------------------
+SITE_BLOCK_FAMILIES = ("std_normal", "normal", "bernoulli_logits",
+                       "categorical_logits")
+
+
+def site_block_sum(family: str, segments: Sequence[Tuple],
+                   *, use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Sum the log-densities of all same-family site segments in ONE launch.
+
+    This is the hot-path primitive behind the fused log-joint backend: the
+    fused evaluators gather every fusible tilde site of a model run into
+    per-family segment lists, and this function evaluates each family with a
+    single kernel launch over the concatenated flat block — per-site Python
+    structure never reaches the compiled program.
+
+    Parameters
+    ----------
+    family : str
+        One of ``SITE_BLOCK_FAMILIES``:
+
+        * ``"std_normal"``  — segments ``(z,)``, 1-D standardised values;
+          the ``-sum(log scale)`` Jacobian term is the caller's business
+          (the fused evaluators accumulate it analytically per site).
+        * ``"normal"``      — segments ``(x, loc, scale)``, each 1-D of one
+          common length per segment (pre-broadcast by the caller).
+        * ``"bernoulli_logits"`` — segments ``(logits, y)``, each 1-D.
+        * ``"categorical_logits"`` — segments ``(logits, labels)`` with
+          ``logits (N_i, C)`` and ``labels (N_i,)`` int; all segments in one
+          call must share ``C``.
+    segments : sequence of tuples of jax.Array
+        Per-site flattened parameter/value blocks as above.
+    use_pallas : bool, optional
+        Force (``True``) or forbid (``False``) the Pallas kernel; default
+        auto-selects it on TPU and uses the ``ref.py`` jnp oracle elsewhere
+        (interpret-mode Pallas is for validation, not speed).
+    interpret : bool, optional
+        Passed through to the Pallas wrappers when ``use_pallas``.
+
+    Returns
+    -------
+    jax.Array, scalar float32
+        ``sum_i sum(logpdf(segment_i))``. Differentiable in the segment
+        arrays (analytic custom VJPs on the Pallas path, plain jnp on the
+        reference path).
+    """
+    if family not in SITE_BLOCK_FAMILIES:
+        raise ValueError(f"unknown site-block family '{family}'; "
+                         f"expected one of {SITE_BLOCK_FAMILIES}")
+    if not segments:
+        return jnp.zeros((), jnp.float32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if len(segments) == 1:
+        cols = segments[0]
+    else:
+        cols = tuple(jnp.concatenate(parts, axis=0)
+                     for parts in zip(*segments))
+    if family == "std_normal":
+        (z,) = cols
+        if use_pallas:
+            return std_normal_logpdf_sum(z, interpret=interpret)
+        return ref.std_normal_logpdf_sum_ref(z)
+    if family == "normal":
+        x, mu, sig = cols
+        if use_pallas:
+            return normal_logpdf_sum(x, mu, sig, interpret=interpret)
+        return ref.normal_logpdf_sum_ref(x, mu, sig)
+    if family == "bernoulli_logits":
+        logits, y = cols
+        if use_pallas:
+            return bernoulli_logits_logpmf_sum(logits, y, interpret=interpret)
+        return ref.bernoulli_logits_logpmf_sum_ref(logits, y)
+    logits, labels = cols
+    if use_pallas:
+        return categorical_logits_logpmf_sum(logits, labels,
+                                             interpret=interpret)
+    return ref.categorical_logits_logpmf_sum_ref(logits, labels)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

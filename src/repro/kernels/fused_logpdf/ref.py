@@ -9,6 +9,11 @@ import jax.numpy as jnp
 _HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
 
 
+def std_normal_logpdf_sum_ref(z):
+    z = jnp.asarray(z, jnp.float32)
+    return jnp.sum(-0.5 * z * z - _HALF_LOG_2PI)
+
+
 def normal_logpdf_sum_ref(x, loc, scale):
     x = jnp.asarray(x, jnp.float32)
     loc = jnp.asarray(loc, jnp.float32)

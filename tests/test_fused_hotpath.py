@@ -1,0 +1,250 @@
+"""Fused flat-buffer log-joint: parity vs the per-site reference path,
+flat()/replace_flat round-trips, and the vmapped run_chains driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import model, observe, sample
+from repro.dists import (Bernoulli, BernoulliLogits, Beta, Categorical,
+                         Dirichlet, HalfNormal, InverseGamma, MvNormalDiag,
+                         Normal)
+from repro.infer import HMC, NUTS, RWMH, run_chains
+from repro.kernels.fused_logpdf import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# parity models: scalar sites, grouped element sites, mixed supports
+# ---------------------------------------------------------------------------
+def _scalar_model():
+    np.random.seed(0)
+    y = np.random.normal(1.0, 0.5, size=100).astype(np.float32)
+
+    @model
+    def scalar(y):
+        mu = sample("mu", Normal(0.0, 10.0))
+        s = sample("s", HalfNormal(2.0))
+        observe("y", Normal(mu, s), y)
+
+    return scalar(jnp.asarray(y))
+
+
+def _grouped_model():
+    @model
+    def loopy(n):
+        tot = 0.0
+        for i in range(n):
+            tot = tot + sample(f"x[{i}]", Normal(float(i), 1.0 + 0.1 * i))
+        observe("y", Normal(tot, 1.0), 2.5)
+
+    return loopy(5)
+
+
+def _mixed_model():
+    np.random.seed(1)
+    X = np.random.normal(size=(40, 3)).astype(np.float32)
+    yb = (np.random.uniform(size=40) < 0.5).astype(np.int32)
+    lab = np.random.randint(0, 4, size=12).astype(np.int32)
+
+    @model
+    def mixed(X, yb, lab):
+        w = sample("w", MvNormalDiag(jnp.zeros(3), jnp.ones(3)))
+        s = sample("s", InverseGamma(2.0, 3.0))  # positive support
+        p = sample("p", Beta(2.0, 2.0))          # unit interval support
+        observe("yb", BernoulliLogits(X @ w + jnp.log(p)), yb)
+        logits = jnp.stack([w * s, w * 2.0, -w, w + 1.0, w - 1.0])[:, :1]
+        observe("lab", Categorical(jnp.broadcast_to(
+            logits.T, (12, 5)).astype(jnp.float32)), lab)
+
+    return mixed(jnp.asarray(X), jnp.asarray(yb), jnp.asarray(lab))
+
+
+@pytest.mark.parametrize("builder",
+                         [_scalar_model, _grouped_model, _mixed_model],
+                         ids=["scalar", "grouped", "mixed"])
+def test_fused_logjoint_and_grad_match_reference(builder):
+    """Fused flat-block density == per-site reference (value and grad)."""
+    m = builder()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(0))
+    lp_f = float(jax.jit(m.logjoint)(tvi))
+    lp_r = float(m.logjoint(tvi, backend="reference"))
+    np.testing.assert_allclose(lp_f, lp_r, rtol=1e-5, atol=1e-5)
+
+    linked = tvi.link()
+    u = linked.flat()
+    f_fused = jax.jit(jax.value_and_grad(m.make_logdensity_fn(linked)))
+    f_ref = jax.jit(jax.value_and_grad(
+        m.make_logdensity_fn(linked, backend="reference")))
+    vf, gf = f_fused(u)
+    vr, gr = f_ref(u)
+    np.testing.assert_allclose(float(vf), float(vr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_contexts_decompose():
+    """Context weighting composes with the fused blocks exactly."""
+    m = _scalar_model()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(0))
+    joint = float(m.logjoint(tvi))
+    pri = float(m.logprior(tvi))
+    lik = float(m.loglikelihood(tvi))
+    np.testing.assert_allclose(pri + lik, joint, rtol=1e-5)
+
+
+def test_site_block_sum_pallas_interpret_matches_ref():
+    """The Pallas kernels (interpret mode) agree with the jnp oracle on
+    multi-segment same-family blocks — the TPU path's numerics."""
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 6)
+    segs_n = [
+        (jax.random.normal(ks[0], (1000,)), jnp.zeros(1000), jnp.ones(1000)),
+        (jax.random.normal(ks[1], (37,)), jnp.full((37,), 0.5),
+         jnp.full((37,), 2.0)),
+    ]
+    segs_b = [
+        (jax.random.normal(ks[2], (300,)),
+         (jax.random.uniform(ks[3], (300,)) < 0.5).astype(jnp.float32)),
+    ]
+    segs_c = [
+        (jax.random.normal(ks[4], (64, 7)),
+         jax.random.randint(ks[5], (64,), 0, 7)),
+    ]
+    segs_z = [(jax.random.normal(ks[0], (1000,)),),
+              (jax.random.normal(ks[1], (129,)),)]
+    for family, segs in (("normal", segs_n), ("std_normal", segs_z),
+                         ("bernoulli_logits", segs_b),
+                         ("categorical_logits", segs_c)):
+        got = ops.site_block_sum(family, segs, use_pallas=True,
+                                 interpret=True)
+        want = ops.site_block_sum(family, segs, use_pallas=False)
+        np.testing.assert_allclose(float(got), float(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_site_block_sum_empty_and_unknown():
+    assert float(ops.site_block_sum("normal", [])) == 0.0
+    with pytest.raises(ValueError):
+        ops.site_block_sum("poisson", [(jnp.zeros(3),)])
+
+
+def test_fused_falls_back_for_unsupported_families():
+    """A model of only non-fusible sites still evaluates correctly."""
+    @model
+    def nofuse():
+        s = sample("s", InverseGamma(2.0, 3.0))
+        observe("k", Bernoulli(0.25 + 0.0 * s), 1)
+
+    m = nofuse()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(3))
+    np.testing.assert_allclose(float(m.logjoint(tvi)),
+                               float(m.logjoint(tvi, backend="reference")),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flat() / replace_flat symmetry
+# ---------------------------------------------------------------------------
+def _simplex_model():
+    @model
+    def sm():
+        p = sample("p", Dirichlet(jnp.ones(4)))   # unc_shape (3,) != (4,)
+        mu = sample("mu", Normal(0.0, 1.0))
+        observe("y", Normal(mu * p[0], 1.0), 0.3)
+
+    return sm()
+
+
+def test_flat_roundtrip_unlinked_and_linked():
+    m = _simplex_model()
+    tvi = m.typed_varinfo(jax.random.PRNGKey(4))
+    # constrained layout: simplex keeps all 4 slots
+    assert tvi.num_flat == 5 == tvi.flat().shape[0]
+    rt = tvi.replace_flat(tvi.flat())
+    np.testing.assert_allclose(np.asarray(rt.flat()),
+                               np.asarray(tvi.flat()), rtol=1e-6)
+    # linked layout: stick-breaking drops one slot
+    linked = tvi.link()
+    assert linked.num_flat == 4 == linked.flat().shape[0]
+    rt2 = linked.replace_flat(linked.flat())
+    np.testing.assert_allclose(np.asarray(rt2.flat()),
+                               np.asarray(linked.flat()), rtol=1e-6)
+    # and the layouts agree with the per-site metadata
+    sl = tvi.layout.slice_of("p")
+    assert (sl.size, sl.unc_size) == (4, 3)
+
+
+def test_flat_layout_shared_across_instances():
+    m = _simplex_model()
+    a = m.typed_varinfo(jax.random.PRNGKey(5))
+    b = m.typed_varinfo(jax.random.PRNGKey(6))
+    assert a.layout is b.layout  # cached on the trace TYPE
+
+
+# ---------------------------------------------------------------------------
+# run_chains — the vmapped multi-chain driver
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def chain_model():
+    np.random.seed(7)
+    y = np.random.normal(2.0, 1.0, size=100).astype(np.float32)
+
+    @model
+    def g(y):
+        mu = sample("mu", Normal(0.0, 10.0))
+        s = sample("s", HalfNormal(2.0))
+        observe("y", Normal(mu, s), y)
+
+    return g(jnp.asarray(y)), y
+
+
+def test_run_chains_shapes_and_stats(chain_model):
+    m, y = chain_model
+    ch = run_chains(jax.random.PRNGKey(0), m,
+                    HMC(step_size=0.05, n_leapfrog=4, adapt_step_size=True),
+                    num_samples=80, num_warmup=80, num_chains=4)
+    assert ch.num_chains == 4 and ch.num_samples == 80
+    assert ch["mu"].shape == (4, 80)
+    assert ch["s"].shape == (4, 80)
+    assert ch.stats["logp"].shape == (4, 80)
+    assert ch.stats["accept_prob"].shape == (4, 80)
+    assert abs(ch.mean("mu") - y.mean()) < 0.3
+
+
+def test_run_chains_per_chain_prng_independence(chain_model):
+    m, _ = chain_model
+    ch = run_chains(jax.random.PRNGKey(1), m, RWMH(proposal_scale=0.3),
+                    num_samples=60, num_chains=4, init_jitter=0.0)
+    # identical inits, distinct per-chain keys => distinct trajectories
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.allclose(ch["mu"][i], ch["mu"][j])
+
+
+def test_run_chains_reproducible(chain_model):
+    m, _ = chain_model
+    kern = HMC(step_size=0.05, n_leapfrog=2)
+    ch1 = run_chains(jax.random.PRNGKey(2), m, kern, num_samples=30,
+                     num_chains=2)
+    ch2 = run_chains(jax.random.PRNGKey(2), m, kern, num_samples=30,
+                     num_chains=2)
+    np.testing.assert_allclose(ch1["mu"], ch2["mu"])
+
+
+def test_run_chains_adaptive_zero_warmup_keeps_step_size(chain_model):
+    """adapt_step_size=True with num_warmup=0 must keep the configured
+    step size — NOT exp(0)=1.0 from the untouched dual-averaging state."""
+    m, _ = chain_model
+    ch = run_chains(jax.random.PRNGKey(11), m,
+                    HMC(step_size=0.01, n_leapfrog=2, adapt_step_size=True),
+                    num_samples=40, num_warmup=0, num_chains=2)
+    assert ch.stats["accept_prob"].mean() > 0.8
+
+
+def test_run_chains_nuts_tree_depth_stat(chain_model):
+    m, _ = chain_model
+    ch = run_chains(jax.random.PRNGKey(3), m,
+                    NUTS(step_size=0.1, max_depth=5),
+                    num_samples=40, num_warmup=40, num_chains=2)
+    assert ch.stats["tree_depth"].shape == (2, 40)
+    assert ch.stats["tree_depth"].mean() >= 1.0

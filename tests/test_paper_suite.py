@@ -53,8 +53,10 @@ def test_gauss_unknown_posterior_is_correct():
     """End-to-end statistical check on one Table-1 model (conjugate-ish)."""
     pm = ps.build("gauss_unknown", n=2000)
     from repro.infer import HMC
-    ch = HMC(step_size=0.03, n_leapfrog=8).run(
-        jax.random.PRNGKey(3), pm.model, num_samples=800)
+    # adaptive warmup discards the prior-init burn-in, which otherwise
+    # biases the 800-draw mean beyond the 0.05 tolerance
+    ch = HMC(step_size=0.03, n_leapfrog=8, adapt_step_size=True).run(
+        jax.random.PRNGKey(3), pm.model, num_samples=800, num_warmup=300)
     y = pm.data["y"]
     assert abs(ch.mean("m") - y.mean()) < 0.05
     assert abs(np.sqrt(ch.mean("s")) - y.std()) < 0.05
