@@ -1,0 +1,131 @@
+"""Shared JSON schema + IO for recorded benchmark baselines.
+
+Every committed ``BENCH_*.json`` at the repo root follows ONE schema so
+that baselines from different benches (log-joint, leapfrog, roofline)
+can be diffed and regression-checked uniformly:
+
+    {
+      "schema_version": 1,
+      "bench": "leapfrog",                  # which bench produced it
+      "machine": {                          # where it was measured
+        "platform": ..., "processor": ..., "cpu_count": ...,
+        "python": ..., "jax": ..., "backend": "cpu"|"tpu"|"gpu"
+      },
+      "config": {"seed": 0, "warmup": 3, "repeats": 5, ...},
+      "entries": [                          # one record per measurement
+        {"name": "...", "us_per_call": 12.3, "extra": {...}}, ...
+      ]
+    }
+
+``us_per_call`` is the headline number (microseconds per call, best-of
+trials); everything bench-specific (speedups, parity errors, structural
+byte counts) lives under ``extra``. Stdlib-only on purpose — the schema
+smoke test must run without jax.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+__all__ = ["SCHEMA_VERSION", "machine_info", "make_report", "entry",
+           "validate_report", "write_report", "read_report"]
+
+
+def machine_info(backend: Optional[str] = None) -> Dict:
+    """Host + software stamp for a report (backend auto-detected)."""
+    if backend is None:
+        try:
+            import jax
+            backend = jax.default_backend()
+        except Exception:
+            backend = "unknown"
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = "unavailable"
+    return {
+        "platform": platform.platform(),
+        "processor": platform.processor() or platform.machine(),
+        "cpu_count": os.cpu_count() or 0,
+        "python": platform.python_version(),
+        "jax": jax_version,
+        "backend": backend,
+    }
+
+
+def entry(name: str, us_per_call: float, **extra) -> Dict:
+    """One measurement record (extra kwargs land under ``extra``)."""
+    return {"name": name, "us_per_call": float(us_per_call),
+            "extra": extra}
+
+
+def make_report(bench: str, entries: List[Dict], *, seed: int = 0,
+                warmup: int = 3, repeats: int = 5,
+                backend: Optional[str] = None, **config) -> Dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "machine": machine_info(backend),
+        "config": {"seed": seed, "warmup": warmup, "repeats": repeats,
+                   **config},
+        "entries": list(entries),
+    }
+
+
+def validate_report(report: Dict) -> List[str]:
+    """Schema check; returns a list of problems (empty = valid)."""
+    errs = []
+
+    def need(obj, key, types, where):
+        if not isinstance(obj, dict) or key not in obj:
+            errs.append(f"{where}: missing '{key}'")
+            return None
+        v = obj[key]
+        if not isinstance(v, types):
+            errs.append(f"{where}.{key}: expected {types}, got {type(v)}")
+            return None
+        return v
+
+    if need(report, "schema_version", int, "report") != SCHEMA_VERSION:
+        errs.append(f"report.schema_version != {SCHEMA_VERSION}")
+    need(report, "bench", str, "report")
+    machine = need(report, "machine", dict, "report")
+    if machine is not None:
+        for k, t in (("platform", str), ("processor", str),
+                     ("cpu_count", int), ("python", str), ("jax", str),
+                     ("backend", str)):
+            need(machine, k, t, "machine")
+    config = need(report, "config", dict, "report")
+    if config is not None:
+        for k in ("seed", "warmup", "repeats"):
+            need(config, k, int, "config")
+    entries = need(report, "entries", list, "report")
+    if entries is not None:
+        if not entries:
+            errs.append("entries: empty")
+        for i, e in enumerate(entries):
+            name = need(e, "name", str, f"entries[{i}]")
+            us = need(e, "us_per_call", (int, float), f"entries[{i}]")
+            need(e, "extra", dict, f"entries[{i}]")
+            if us is not None and us < 0:
+                errs.append(f"entries[{i}] '{name}': negative us_per_call")
+    return errs
+
+
+def write_report(report: Dict, path: str) -> None:
+    errs = validate_report(report)
+    if errs:
+        raise ValueError(f"invalid bench report for {path}: {errs}")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+
+def read_report(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)

@@ -175,6 +175,80 @@ def bench_fused_vs_reference_logjoint(lines: List[str]) -> None:
             f"flops_ratio={flop_ratio:.3f};same_hlo={same}")
 
 
+def _logjoint_entries() -> List[dict]:
+    """Schema entries: fused vs reference log-joint value_and_grad."""
+    import re
+
+    from benchmarks.bench_io import entry
+    from repro.models import paper_suite
+    key = jax.random.PRNGKey(0)
+    out = []
+
+    def canon_hlo(compiled_fn) -> str:
+        return re.sub(r", metadata=\{[^}]*\}", "", compiled_fn.as_text())
+
+    for name in ("gaussian_10k", "gauss_unknown", "logreg"):
+        pm = paper_suite.build(name)
+        tvi = pm.model.typed_varinfo(key).link()
+        q0 = tvi.flat()
+        compiled = {}
+        for backend in ("reference", "fused"):
+            f = pm.model.make_logdensity_fn(tvi, backend=backend)
+            compiled[backend] = jax.jit(
+                jax.value_and_grad(f)).lower(q0).compile()
+        same = canon_hlo(compiled["fused"]) == canon_hlo(
+            compiled["reference"])
+        times = {b: float("inf") for b in compiled}
+        for _ in range(5):
+            for b, g in compiled.items():
+                times[b] = min(times[b], _time_call(g, q0, trials=1) * 1e6)
+        out.append(entry(
+            f"logjoint/{name}", times["fused"],
+            reference_us=times["reference"],
+            speedup=times["reference"] / max(times["fused"], 1e-9),
+            same_hlo=same, dim=int(q0.shape[0])))
+    return out
+
+
+def _family_parity_entries() -> List[dict]:
+    """Schema entries: interpret-mode value parity per kernel family."""
+    from benchmarks.bench_io import entry
+    from repro.kernels.fused_logpdf import ops, ref
+    key = jax.random.PRNGKey(3)
+    n = 1 << 14
+    x = jax.random.normal(key, (n,)) * 0.5
+    xp = jnp.abs(x) + 0.1          # positive support
+    xu = jax.nn.sigmoid(x)         # unit interval
+    cases = {
+        "normal": (ops.normal_logpdf_sum, ref.normal_logpdf_sum_ref,
+                   (x, 0.1, 1.2)),
+        "gamma": (ops.gamma_unnorm_logpdf_sum,
+                  ref.gamma_unnorm_logpdf_sum_ref,
+                  (xp, jnp.full((n,), 1.5), jnp.full((n,), 0.8))),
+        "beta": (ops.beta_unnorm_logpdf_sum,
+                 ref.beta_unnorm_logpdf_sum_ref,
+                 (xu, jnp.full((n,), 1.0), jnp.full((n,), 2.0))),
+        "student_t": (ops.student_t_unnorm_logpdf_sum,
+                      ref.student_t_unnorm_logpdf_sum_ref,
+                      (x, jnp.full((n,), 4.0))),
+    }
+    out = []
+    for fam, (op_fn, ref_fn, args) in cases.items():
+        got = float(op_fn(*args, interpret=True))
+        want = float(ref_fn(*args))
+        rel = abs(got - want) / (1.0 + abs(want))
+        out.append(entry(f"family_parity/{fam}", 0.0, n=n,
+                         rel_err=rel, pass_1e5=bool(rel < 1e-5)))
+    return out
+
+
+def report() -> dict:
+    """Schema-valid report for ``BENCH_logjoint.json``."""
+    from benchmarks.bench_io import make_report
+    entries = _logjoint_entries() + _family_parity_entries()
+    return make_report("logjoint", entries, seed=0, warmup=3, repeats=5)
+
+
 def run() -> List[str]:
     lines = ["name,us_per_call,derived"]
     bench_fused_logpdf(lines)
@@ -184,5 +258,25 @@ def run() -> List[str]:
     return lines
 
 
+def main(argv=None) -> int:
+    import argparse
+    import sys as _sys
+
+    from benchmarks.bench_io import write_report
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.json:
+        rep = report()
+        for e in rep["entries"]:
+            print(e["name"], f"{e['us_per_call']:.1f}us", e["extra"])
+        write_report(rep, args.json)
+        print(f"wrote {args.json}")
+    else:
+        print("\n".join(run()))
+    return 0
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import sys
+    sys.exit(main())

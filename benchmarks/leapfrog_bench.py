@@ -1,0 +1,217 @@
+"""Fused n-step leapfrog vs reference autodiff leapfrog — wall clock.
+
+The tentpole measurement: the ENTIRE leapfrog trajectory as the fused
+unit (``repro.kernels.fused_leapfrog``) against the reference
+integrator (``repro.infer.hmc._leapfrog`` over
+``jax.value_and_grad(logdensity)``). Both sides are jit-compiled and
+timed per n-step call on the same flat state, so the comparison
+isolates exactly what the fusion removes: the autodiff backward pass
+and the per-site density dispatch inside the hot loop.
+
+Off-TPU the fused side runs the jnp oracle (same arithmetic as the
+Pallas kernel, scan over analytic elementwise gradients) — the
+backward-pass elimination is backend-independent, which is what makes
+a recorded CPU baseline meaningful. Parity of the final (q, p, logp,
+grad) against the reference integrator is recorded per entry.
+
+Models: the paper's ``gaussian_10k`` plus synthetic separable mixes
+over the new kernel families (gamma/beta/student-t); one deliberately
+non-separable model is recorded with ``supported=false`` to pin the
+fallback behaviour in the baseline.
+
+``python -m benchmarks.leapfrog_bench [--json PATH]`` writes the
+schema-valid report (``BENCH_leapfrog.json`` at the repo root is the
+committed baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Optional
+
+SEED = 0
+WARMUP = 3
+REPEATS = 5
+N_STEPS = 8
+STEP_SIZE = 0.01
+
+
+def _time_interleaved(fns: Dict[str, object], args, n: int = 30,
+                      trials: int = REPEATS,
+                      warmup: int = WARMUP) -> Dict[str, float]:
+    """Best-of-``trials`` mean per-call seconds for each fn, with trials
+    INTERLEAVED so shared-host noise hits every contender equally."""
+    import jax
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    best = {k: float("inf") for k in fns}
+    for _ in range(trials):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(n):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best[k] = min(best[k], (time.perf_counter() - t0) / n)
+    return best
+
+
+def _bench_models():
+    """(name, model) pairs: paper model + synthetic separable mixes."""
+    import jax.numpy as jnp
+
+    from repro import model, observe, sample
+    from repro.dists import (Beta, Cauchy, Exponential, Gamma, HalfNormal,
+                             LogNormal, Normal, StudentT, Uniform)
+    from repro.models import paper_suite
+
+    out = [("gaussian_10k", paper_suite.build("gaussian_10k").model)]
+
+    @model
+    def gamma_mix_4k():
+        sample("g", Gamma(2.0 * jnp.ones(2048), 1.5))
+        sample("e", Exponential(0.5 * jnp.ones(1024)))
+        sample("h", HalfNormal(jnp.ones(1024)))
+
+    out.append(("gamma_mix_4k", gamma_mix_4k()))
+
+    @model
+    def family_mix_8k():
+        sample("n", Normal(jnp.zeros(2048), 2.0))
+        sample("g", Gamma(2.0 * jnp.ones(1024), 1.5))
+        sample("b", Beta(2.0 * jnp.ones(1024), 3.0))
+        sample("t", StudentT(4.0, jnp.zeros(2048), 1.0))
+        sample("c", Cauchy(jnp.zeros(1024), 2.0))
+        sample("u", Uniform(-jnp.ones(512), 1.0))
+        sample("l", LogNormal(jnp.zeros(512), 1.0))
+
+    out.append(("family_mix_8k", family_mix_8k()))
+
+    @model
+    def nonsep_hier():
+        # scale parameter feeds the likelihood: NOT separable in u
+        s = sample("s", HalfNormal(1.0))
+        observe("y", Normal(jnp.zeros(64), s),
+                0.1 * jnp.arange(64, dtype=jnp.float32))
+
+    out.append(("nonseparable_hier", nonsep_hier()))
+    return out
+
+
+def bench_one(name: str, m) -> Dict:
+    """One entry: fused vs reference n-step leapfrog on model ``m``."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.bench_io import entry
+    from repro.core.potential import build_potential_spec
+    from repro.infer.hmc import _leapfrog
+    from repro.kernels.fused_leapfrog import fused_leapfrog
+
+    key = jax.random.PRNGKey(SEED)
+    tvi = m.typed_varinfo(key).link()
+    logdensity = m.make_logdensity_fn(tvi, backend="fused")
+    dim = int(tvi.flat().shape[0])
+    spec = build_potential_spec(m, tvi, backend="fused")
+
+    q0 = tvi.flat()
+    kq, kp = jax.random.split(jax.random.fold_in(key, 9))
+    q = q0 + 0.1 * jax.random.normal(kq, (dim,))
+    p = jax.random.normal(kp, (dim,))
+
+    ld_and_grad = jax.value_and_grad(logdensity)
+    _, g = ld_and_grad(q)
+
+    @jax.jit
+    def reference(q, p, g):
+        return _leapfrog(ld_and_grad, q, p, g, STEP_SIZE, N_STEPS)
+
+    if spec is None:
+        ref_us = _time_interleaved({"ref": reference},
+                                   (q, p, g))["ref"] * 1e6
+        return entry(f"leapfrog/{name}", ref_us, dim=dim, n_steps=N_STEPS,
+                     supported=False, reference_us=ref_us)
+
+    @jax.jit
+    def fused(q, p, g):
+        return fused_leapfrog(spec, q, p, g, STEP_SIZE, N_STEPS)
+
+    times = _time_interleaved({"ref": reference, "fused": fused}, (q, p, g))
+    ref_us, fused_us = times["ref"] * 1e6, times["fused"] * 1e6
+
+    # per-trajectory parity (acceptance: 1e-5 on the state)
+    rq, rp, rlp, rg = jax.block_until_ready(reference(q, p, g))
+    fq, fp, flp, fg = jax.block_until_ready(fused(q, p, g))
+    err_q = float(np.max(np.abs(np.asarray(rq) - np.asarray(fq))))
+    err_p = float(np.max(np.abs(np.asarray(rp) - np.asarray(fp))))
+    err_g = float(np.max(np.abs(np.asarray(rg) - np.asarray(fg))))
+    err_lp = float(abs(float(rlp) - float(flp))
+                   / (1.0 + abs(float(rlp))))
+    speedup = ref_us / max(fused_us, 1e-9)
+    return entry(f"leapfrog/{name}", fused_us, dim=dim, n_steps=N_STEPS,
+                 supported=True, reference_us=ref_us, speedup=speedup,
+                 max_err_q=err_q, max_err_p=err_p, max_err_grad=err_g,
+                 rel_err_logp=err_lp,
+                 uniform_op=(None if spec.uniform_op is None
+                             else int(spec.uniform_op)))
+
+
+def report() -> Dict:
+    from benchmarks.bench_io import entry, make_report
+    entries = [bench_one(name, m) for name, m in _bench_models()]
+    # headline aggregate: geometric-mean speedup over the supported models
+    sups = [e for e in entries if e["extra"].get("supported")]
+    if sups:
+        logs = [e["extra"]["speedup"] for e in sups]
+        geo = 1.0
+        for s in logs:
+            geo *= s
+        geo **= 1.0 / len(logs)
+        mean_us = sum(e["us_per_call"] for e in sups) / len(sups)
+        entries.append(entry("leapfrog/geomean_supported", mean_us,
+                             speedup=geo, n_models=len(sups),
+                             supported=True))
+    return make_report("leapfrog", entries, seed=SEED, warmup=WARMUP,
+                       repeats=REPEATS, n_steps=N_STEPS,
+                       step_size_x1000=int(STEP_SIZE * 1000))
+
+
+def run() -> List[str]:
+    """CSV lines for the ``benchmarks.run`` aggregator."""
+    lines = ["name,us_per_call,derived"]
+    for e in report()["entries"]:
+        x = e["extra"]
+        if "reference_us" in x and x.get("supported"):
+            lines.append(
+                f"{e['name']},{e['us_per_call']:.1f},"
+                f"reference_us={x['reference_us']:.1f};"
+                f"speedup={x['speedup']:.2f}x;"
+                f"max_err_q={x['max_err_q']:.1e}")
+        elif "n_models" in x:
+            lines.append(f"{e['name']},{e['us_per_call']:.1f},"
+                         f"geomean_speedup={x['speedup']:.2f}x")
+        else:
+            lines.append(f"{e['name']},{e['us_per_call']:.1f},"
+                         f"supported=false (reference integrator)")
+    return lines
+
+
+def main(argv=None) -> int:
+    from benchmarks.bench_io import write_report
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the schema-valid JSON report here")
+    args = ap.parse_args(argv)
+    rep = report()
+    for e in rep["entries"]:
+        print(e["name"], f"{e['us_per_call']:.1f}us", e["extra"])
+    if args.json:
+        write_report(rep, args.json)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

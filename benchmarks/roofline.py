@@ -1,7 +1,26 @@
-"""Roofline analysis (deliverable g): 3 terms per (arch x shape x mesh).
+"""Roofline analysis: structural kernel roofline + legacy dryrun mode.
 
-Reads the dry-run JSONL (``launch/dryrun.py`` output) and derives, per
-cell, on TPU v5e hardware constants:
+KERNEL ROOFLINE (runs anywhere, no TPU, no dryrun artefacts): for each
+fused kernel at its production shape, count the flops and the
+HBM bytes the kernel structurally moves (inputs once + outputs once;
+accumulators live in VMEM), then place it on the TPU v5e roofline:
+
+  compute term = flops / 197 TFLOP/s          [s]
+  memory term  = bytes / 819 GB/s             [s]
+  dominant     = the larger term; arithmetic intensity = flops/bytes
+
+Every fused_logpdf reduction streams its operands once and emits one
+scalar — intensity sits at a few flops/byte, far below the v5e ridge
+(~240 f32 flops/byte), so ALL of them are memory-bound: the fusion
+win is traffic elimination, not flop throughput. The fused leapfrog
+multiplies the same story by n_steps: state stays on-chip across the
+whole trajectory, so bytes stay O(state) while flops grow O(n_steps).
+``python -m benchmarks.roofline --json PATH`` writes the schema-valid
+report (see ``bench_io``).
+
+LEGACY DRYRUN MODE (kept for the launch pipeline): reads the dry-run
+JSONL (``launch/dryrun.py`` output) and derives, per cell, on TPU v5e
+hardware constants:
 
   compute term    = HLO_FLOPs_per_device / 197 TFLOP/s          [s]
   memory term     = HLO_bytes_per_device / 819 GB/s             [s]
@@ -127,21 +146,121 @@ def table(path: str = DEFAULT_PATH, mesh: Optional[str] = "16x16"
     return rows
 
 
+# -- kernel roofline (off-TPU, structural) -----------------------------------
+
+def _kernel_cells() -> List[Dict]:
+    """Structural (flops, bytes) per fused kernel at production shape.
+
+    Byte counts are the kernel's streamed traffic: every input tile read
+    once from HBM, outputs written once, reductions accumulated in VMEM
+    (only the final scalar leaves). Flop counts are per-element op
+    counts of the fused arithmetic (transcendentals counted as one).
+    """
+    cells = []
+    n = 1 << 20  # 1M-element tilde site, the fused_logpdf bench shape
+
+    # elementwise log-density reductions: x (+params) in, scalar out
+    for fam, flops_per, n_arrays in (
+            ("normal", 5, 1),        # z=(x-mu)*is; z*z; fma into acc
+            ("gamma", 6, 3),         # am1*log x - rate*x (log, 2 mul, sub)
+            ("beta", 8, 3),          # am1*log x + bm1*log1p(-x)
+            ("student_t", 7, 2),     # -(df+1)/2 * log1p(z^2/df)
+    ):
+        flops = flops_per * n
+        bytes_ = 4 * n_arrays * n + 4
+        cells.append({"cell": f"fused_logpdf/{fam}_1M",
+                      "flops": flops, "bytes": bytes_})
+
+    # dense MvNormal quadform: xc (N,D) + prec (D,D) in, scalar out
+    N, D = 4096, 128
+    cells.append({"cell": f"fused_logpdf/mvn_quad_{N}x{D}",
+                  "flops": 2.0 * N * D * D,
+                  "bytes": 4.0 * (N * D + D * D) + 4})
+
+    # fused leapfrog: q/p/g + 5 coeff arrays in, q/p/g + scalar out;
+    # n_steps trajectories run entirely on-chip (bytes do NOT scale
+    # with n_steps — that is the point of the fusion)
+    dim, n_steps = 10_000, 8
+    cells.append({"cell": f"fused_leapfrog/gauss_{dim}x{n_steps}",
+                  "flops": (6 + 4) * dim * n_steps + 3 * dim,
+                  "bytes": 4.0 * (3 + 5 + 3) * dim + 4})
+    # unfused comparison: same trajectory, q/p/g round-trip HBM every
+    # step and the VJP re-reads activations
+    cells.append({"cell": f"unfused_leapfrog/gauss_{dim}x{n_steps}",
+                  "flops": (6 + 4 + 5) * dim * n_steps,
+                  "bytes": 4.0 * (3 + 5 + 3) * dim * n_steps + 4})
+    return cells
+
+
+def kernel_roofline() -> List[Dict]:
+    """Schema entries: v5e time terms per structural kernel cell."""
+    from benchmarks.bench_io import entry
+    out = []
+    for c in _kernel_cells():
+        t_compute = c["flops"] / PEAK_FLOPS
+        t_memory = c["bytes"] / HBM_BW
+        dominant = "memory" if t_memory >= t_compute else "compute"
+        bound_us = max(t_compute, t_memory) * 1e6
+        out.append(entry(
+            f"roofline/{c['cell']}", bound_us,
+            flops=float(c["flops"]), bytes=float(c["bytes"]),
+            t_compute_us=t_compute * 1e6, t_memory_us=t_memory * 1e6,
+            dominant=dominant,
+            intensity_flops_per_byte=c["flops"] / max(c["bytes"], 1.0)))
+    return out
+
+
+def report() -> Dict:
+    """Schema-valid report (``--json``): kernel roofline entries."""
+    from benchmarks.bench_io import make_report
+    return make_report("roofline", kernel_roofline(), seed=0, warmup=0,
+                       repeats=1, peak_flops=int(PEAK_FLOPS),
+                       hbm_bw=int(HBM_BW))
+
+
 def run() -> List[str]:
     """CSV lines for the bench aggregator."""
     lines = ["name,us_per_call,derived"]
-    if not os.path.exists(DEFAULT_PATH):
-        lines.append("roofline/missing,0,run launch/dryrun.py first")
-        return lines
-    for rec in sorted(load(), key=lambda r: r["cell"]):
-        a = analyse(rec)
-        dom_t = max(a["t_compute"], a["t_memory"], a["t_collective"])
+    for e in kernel_roofline():
+        x = e["extra"]
         lines.append(
-            f"roofline/{rec['cell']},{dom_t * 1e6:.1f},"
-            f"dominant={a['dominant']};frac={a['roofline_fraction']:.3f};"
-            f"useful={a['useful_ratio']:.2f};hbm_gb={a['hbm_gb']:.1f}")
+            f"{e['name']},{e['us_per_call']:.3f},"
+            f"dominant={x['dominant']};"
+            f"intensity={x['intensity_flops_per_byte']:.2f}")
+    if os.path.exists(DEFAULT_PATH):
+        for rec in sorted(load(), key=lambda r: r["cell"]):
+            a = analyse(rec)
+            dom_t = max(a["t_compute"], a["t_memory"], a["t_collective"])
+            lines.append(
+                f"roofline/{rec['cell']},{dom_t * 1e6:.1f},"
+                f"dominant={a['dominant']};"
+                f"frac={a['roofline_fraction']:.3f};"
+                f"useful={a['useful_ratio']:.2f};hbm_gb={a['hbm_gb']:.1f}")
     return lines
 
 
+def main(argv=None) -> int:
+    import argparse
+    import sys as _sys
+
+    from benchmarks.bench_io import write_report
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.json:
+        rep = report()
+        for e in rep["entries"]:
+            print(e["name"], f"{e['us_per_call']:.3f}us",
+                  e["extra"]["dominant"])
+        write_report(rep, args.json)
+        print(f"wrote {args.json}")
+    elif os.path.exists(DEFAULT_PATH):
+        print("\n".join(table()))
+    else:
+        print("\n".join(run()))
+    return 0
+
+
 if __name__ == "__main__":
-    print("\n".join(table()))
+    import sys
+    sys.exit(main())

@@ -10,12 +10,15 @@
                     HMC as one jit(vmap(...)) program (enabled by
                     ``--chains N``; also runnable via --only multichain)
 
-``python -m benchmarks.run [--fast] [--only SECTION] [--chains N]``
-(--fast cuts table1 to 200 iterations for quick regression runs)
+``python -m benchmarks.run [--fast] [--only SECTION] [--chains N]
+[--json-dir DIR]`` (--fast cuts table1 to 200 iterations for quick
+regression runs; --json-dir additionally writes the schema-valid
+``BENCH_*.json`` reports — logjoint, leapfrog, roofline — into DIR)
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -47,7 +50,9 @@ def main(argv=None) -> int:
     p.add_argument("--fast", action="store_true")
     p.add_argument("--only", default=None,
                    choices=("table1", "typed_ablation", "kernels",
-                            "roofline", "multichain"))
+                            "leapfrog", "roofline", "multichain"))
+    p.add_argument("--json-dir", default=None, metavar="DIR",
+                   help="also write BENCH_*.json reports into DIR")
     p.add_argument("--chains", type=int, default=None, metavar="N",
                    help="run the vmapped multi-chain driver with N chains "
                         "(adds the 'multichain' section)")
@@ -60,6 +65,9 @@ def main(argv=None) -> int:
     if args.only in (None, "kernels"):
         from benchmarks import kernels_bench
         sections.append(("kernels", kernels_bench.run))
+    if args.only in (None, "leapfrog"):
+        from benchmarks import leapfrog_bench
+        sections.append(("leapfrog", leapfrog_bench.run))
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         sections.append(("roofline", roofline.run))
@@ -81,6 +89,27 @@ def main(argv=None) -> int:
         except Exception as e:  # keep the suite going; record the failure
             print(f"{name}/ERROR,0,{e!r}", flush=True)
         print(f"==== {name} done in {time.time() - t0:.0f}s ====", flush=True)
+
+    if args.json_dir:
+        from benchmarks.bench_io import write_report
+        os.makedirs(args.json_dir, exist_ok=True)
+        reporters = []
+        if args.only in (None, "kernels"):
+            from benchmarks import kernels_bench
+            reporters.append(("BENCH_logjoint.json", kernels_bench.report))
+        if args.only in (None, "leapfrog"):
+            from benchmarks import leapfrog_bench
+            reporters.append(("BENCH_leapfrog.json", leapfrog_bench.report))
+        if args.only in (None, "roofline"):
+            from benchmarks import roofline
+            reporters.append(("BENCH_roofline.json", roofline.report))
+        for fname, reporter in reporters:
+            path = os.path.join(args.json_dir, fname)
+            try:
+                write_report(reporter(), path)
+                print(f"wrote {path}", flush=True)
+            except Exception as e:
+                print(f"JSON {fname} FAILED: {e!r}", flush=True)
     return 0
 
 

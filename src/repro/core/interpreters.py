@@ -257,9 +257,11 @@ def _fusible_parts(dist, value):
     (XLA folds the broadcast log-sum into ``N * log(scale)``) and the TPU
     kernel streams one array instead of three.
     """
-    from repro.dists.continuous import Normal
+    from jax.scipy import special as jsp
+
+    from repro.dists.continuous import Beta, Gamma, Normal, StudentT
     from repro.dists.discrete import BernoulliLogits, Categorical
-    from repro.dists.multivariate import MvNormalDiag
+    from repro.dists.multivariate import MvNormal, MvNormalDiag
 
     t = type(dist)
     fdtype = jnp.result_type(float)
@@ -290,6 +292,60 @@ def _fusible_parts(dist, value):
         seg = (jnp.broadcast_to(logits, bshape + (c,)).reshape(-1, c),
                jnp.broadcast_to(labels, bshape).reshape(-1))
         return ("categorical_logits", c, seg, None)
+    if t is Gamma:
+        a = jnp.asarray(dist.concentration, fdtype)
+        b = jnp.asarray(dist.rate, fdtype)
+        x = jnp.asarray(value, fdtype)
+        shape = jnp.broadcast_shapes(jnp.shape(x), jnp.shape(a), jnp.shape(b))
+        seg = (jnp.broadcast_to(x, shape).ravel(),
+               jnp.broadcast_to(a - 1.0, shape).ravel(),
+               jnp.broadcast_to(b, shape).ravel())
+        # kernel streams (a-1) log x - b x; the gammaln normaliser here
+        extra = jnp.sum(jnp.broadcast_to(
+            jsp.xlogy(a, b) - jsp.gammaln(a), shape))
+        return ("gamma", None, seg, extra)
+    if t is Beta:
+        a = jnp.asarray(dist.concentration1, fdtype)
+        b = jnp.asarray(dist.concentration0, fdtype)
+        x = jnp.asarray(value, fdtype)
+        shape = jnp.broadcast_shapes(jnp.shape(x), jnp.shape(a), jnp.shape(b))
+        seg = (jnp.broadcast_to(x, shape).ravel(),
+               jnp.broadcast_to(a - 1.0, shape).ravel(),
+               jnp.broadcast_to(b - 1.0, shape).ravel())
+        extra = jnp.sum(jnp.broadcast_to(
+            jsp.gammaln(a + b) - jsp.gammaln(a) - jsp.gammaln(b), shape))
+        return ("beta", None, seg, extra)
+    if t is StudentT:
+        df = jnp.asarray(dist.df, fdtype)
+        loc = jnp.asarray(dist.loc, fdtype)
+        scale = jnp.asarray(dist.scale, fdtype)
+        x = jnp.asarray(value, fdtype)
+        shape = jnp.broadcast_shapes(jnp.shape(x), jnp.shape(df),
+                                     jnp.shape(loc), jnp.shape(scale))
+        z = jnp.broadcast_to((x - loc) / scale, shape).ravel()
+        seg = (z, jnp.broadcast_to(df, shape).ravel())
+        extra = jnp.sum(jnp.broadcast_to(
+            jsp.gammaln(0.5 * (df + 1.0)) - jsp.gammaln(0.5 * df)
+            - 0.5 * jnp.log(df * jnp.pi) - jnp.log(scale), shape))
+        return ("student_t", None, seg, extra)
+    if t is MvNormal:
+        tril = jnp.asarray(dist.scale_tril, fdtype)
+        if tril.ndim != 2:
+            return None  # batched Cholesky factors: per-site reference path
+        d = tril.shape[-1]
+        x = jnp.asarray(value, fdtype)
+        loc = jnp.asarray(dist.loc, fdtype)
+        bshape = jnp.broadcast_shapes(jnp.shape(x)[:-1],
+                                      jnp.shape(loc)[:-1]
+                                      if jnp.ndim(loc) >= 1 else ())
+        xc = jnp.broadcast_to(x - loc, bshape + (d,)).reshape(-1, d)
+        n = xc.shape[0]
+        linv = jax.lax.linalg.triangular_solve(
+            tril, jnp.eye(d, dtype=fdtype), left_side=True, lower=True)
+        prec = linv.T @ linv
+        extra = n * (-jnp.sum(jnp.log(jnp.diagonal(tril)))
+                     - 0.5 * d * jnp.log(2.0 * jnp.pi))
+        return ("mvnormal_prec", d, (xc, prec), extra)
     return None
 
 

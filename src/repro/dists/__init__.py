@@ -10,7 +10,7 @@ from repro.dists.discrete import (
     Poisson,
 )
 from repro.dists.multivariate import (
-    Dirichlet, MixtureSameFamily, Multinomial, MvNormalDiag,
+    Dirichlet, MixtureSameFamily, Multinomial, MvNormal, MvNormalDiag,
 )
 
 __all__ = [
@@ -20,5 +20,6 @@ __all__ = [
     "LogisticDist", "TruncatedNormal", "Flat",
     "Poisson", "Bernoulli", "BernoulliLogits", "Binomial", "Categorical",
     "DiscreteUniform",
-    "MvNormalDiag", "Dirichlet", "Multinomial", "MixtureSameFamily",
+    "MvNormal", "MvNormalDiag", "Dirichlet", "Multinomial",
+    "MixtureSameFamily",
 ]

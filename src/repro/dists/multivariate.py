@@ -9,9 +9,56 @@ from jax.scipy import special as jsp
 
 from repro.dists.base import Distribution, register_dist
 
-__all__ = ["MvNormalDiag", "Dirichlet", "Multinomial", "MixtureSameFamily"]
+__all__ = ["MvNormal", "MvNormalDiag", "Dirichlet", "Multinomial",
+           "MixtureSameFamily"]
 
 _LOG_2PI = math.log(2.0 * math.pi)
+
+
+@register_dist
+class MvNormal(Distribution):
+    """Dense multivariate Normal parameterised by a Cholesky factor.
+
+    ``scale_tril`` is the lower-triangular L with covariance ``L L^T``.
+    Batched ``x (..., D)`` against one unbatched ``L (D, D)`` is the
+    supported layout (the fused evaluator's dense-precision kernel covers
+    exactly this case).
+    """
+
+    loc: jax.Array = None
+    scale_tril: jax.Array = None
+    event_ndims = 1
+    support = "real"
+
+    # the base-class shape inference strips event_ndims dims from EVERY
+    # leaf, which mangles the (D, D) Cholesky factor — override both.
+    @property
+    def batch_shape(self):
+        lb = jnp.shape(self.loc)[:-1] if jnp.ndim(self.loc) >= 1 else ()
+        return jnp.broadcast_shapes(lb, jnp.shape(self.scale_tril)[:-2])
+
+    @property
+    def event_shape(self):
+        return (jnp.shape(self.scale_tril)[-1],)
+
+    def log_prob(self, x):
+        d = self.scale_tril.shape[-1]
+        xc = jnp.asarray(x) - self.loc
+        b = xc[..., None]
+        a = jnp.broadcast_to(self.scale_tril,
+                             b.shape[:-2] + self.scale_tril.shape[-2:])
+        z = jax.lax.linalg.triangular_solve(
+            a, b, left_side=True, lower=True)[..., 0]
+        half_logdet = jnp.sum(
+            jnp.log(jnp.diagonal(self.scale_tril, axis1=-2, axis2=-1)),
+            axis=-1)
+        return (-0.5 * jnp.sum(z * z, axis=-1) - half_logdet
+                - 0.5 * d * _LOG_2PI)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.shape
+        eps = jax.random.normal(key, shape, self.dtype)
+        return self.loc + jnp.einsum("...ij,...j->...i", self.scale_tril, eps)
 
 
 @register_dist

@@ -235,7 +235,14 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
            else model.typed_varinfo(k_init)).link()
     logdensity = model.make_logdensity_fn(tvi, backend=backend)
     dim = int(tvi.num_flat)
-    kern = kernel.make_kernel(logdensity, dim)
+    spec = None
+    if getattr(kernel, "uses_potential_spec", False):
+        # lazy import: chains.py is imported by hmc.py/nuts.py, which in
+        # turn are what core.potential's validation machinery sits beside
+        from repro.core.potential import build_potential_spec
+        spec = build_potential_spec(model, tvi, backend=backend)
+    kern = (kernel.make_kernel(logdensity, dim, spec=spec)
+            if spec is not None else kernel.make_kernel(logdensity, dim))
 
     q0 = tvi.flat()
     q0s = jnp.broadcast_to(q0, (num_chains, dim))

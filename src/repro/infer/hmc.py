@@ -16,7 +16,7 @@ arithmetic), which is asserted in tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +24,11 @@ import numpy as np
 
 from repro.core.contexts import Context
 from repro.core.model import Model
+from repro.core.potential import build_potential_spec
 from repro.core.varinfo import TypedVarInfo
 from repro.infer.chains import Chain, TransitionKernel, package_draws
+from repro.kernels.fused_leapfrog import (fused_leapfrog,
+                                          potential_value_and_grad)
 
 __all__ = ["HMC", "DualAveraging"]
 
@@ -54,13 +57,19 @@ class DualAveraging:
         return (log_eps, log_eps_bar, h_bar, mu)
 
 
-def _leapfrog(logdensity_and_grad: Callable, q, p, grad, step_size, n_steps: int):
-    """n_steps leapfrog updates with unit metric. Returns (q, p, logp, grad)."""
+def _leapfrog(logdensity_and_grad: Callable, q, p, grad, step_size,
+              n_steps: int, inv_mass=None):
+    """n_steps leapfrog updates. Returns (q, p, logp, grad).
+
+    ``inv_mass`` is an optional DIAGONAL inverse mass (a flat vector);
+    ``None`` keeps the unit metric. The velocity is ``inv_mass * p``.
+    """
 
     def body(carry, _):
         q, p, grad = carry
         p_half = p + 0.5 * step_size * grad
-        q_new = q + step_size * p_half
+        vel = p_half if inv_mass is None else inv_mass * p_half
+        q_new = q + step_size * vel
         logp_new, grad_new = logdensity_and_grad(q_new)
         p_new = p_half + 0.5 * step_size * grad_new
         return (q_new, p_new, grad_new), logp_new
@@ -70,19 +79,40 @@ def _leapfrog(logdensity_and_grad: Callable, q, p, grad, step_size, n_steps: int
 
 
 def hmc_transition(ld_and_grad: Callable, q, logp, grad, step_size,
-                   key, n_leapfrog: int):
-    """One Metropolis-corrected HMC transition with unit metric.
+                   key, n_leapfrog: int, *, inv_mass=None,
+                   leapfrog_fn: Optional[Callable] = None):
+    """One Metropolis-corrected HMC transition.
 
     Returns ``(q, logp, grad, accept_prob, accepted)``; shared by
     ``HMC.run`` and the ``TransitionKernel`` built by ``HMC.make_kernel``
     so both paths run the exact same arithmetic.
+
+    ``inv_mass`` (diagonal, flat vector or None) shapes BOTH the momentum
+    draw (``p ~ N(0, M)``) and the kinetic energy — the single source of
+    metric truth for the fused and reference integrators alike.
+    ``leapfrog_fn(q, p, grad, step_size, n_steps)`` swaps in a fused
+    integrator (which must already close over the same ``inv_mass``);
+    ``None`` runs the reference ``_leapfrog``. The MH correction is
+    identical either way.
     """
     k_mom, k_acc = jax.random.split(key)
-    p0 = jax.random.normal(k_mom, q.shape)
-    q_new, p_new, logp_new, grad_new = _leapfrog(
-        ld_and_grad, q, p0, grad, step_size, n_leapfrog)
-    h0 = -logp + 0.5 * jnp.sum(p0 * p0)
-    h1 = -logp_new + 0.5 * jnp.sum(p_new * p_new)
+    noise = jax.random.normal(k_mom, q.shape)
+    p0 = noise if inv_mass is None else noise / jnp.sqrt(inv_mass)
+    if leapfrog_fn is None:
+        q_new, p_new, logp_new, grad_new = _leapfrog(
+            ld_and_grad, q, p0, grad, step_size, n_leapfrog,
+            inv_mass=inv_mass)
+    else:
+        q_new, p_new, logp_new, grad_new = leapfrog_fn(
+            q, p0, grad, step_size, n_leapfrog)
+
+    def kinetic(p):
+        if inv_mass is None:
+            return 0.5 * jnp.sum(p * p)
+        return 0.5 * jnp.sum(p * p * inv_mass)
+
+    h0 = -logp + kinetic(p0)
+    h1 = -logp_new + kinetic(p_new)
     log_accept = jnp.minimum(0.0, h0 - h1)
     log_accept = jnp.where(jnp.isnan(log_accept), -jnp.inf, log_accept)
     accept = jnp.log(jax.random.uniform(k_acc, ())) < log_accept
@@ -133,13 +163,38 @@ def make_chain_fn(logdensity: Callable, num_samples: int, step_size: float,
 
 @dataclasses.dataclass
 class HMC:
-    """Static HMC with a fixed number of leapfrog steps (paper setup)."""
+    """Static HMC with a fixed number of leapfrog steps (paper setup).
+
+    ``leapfrog`` selects the integrator:
+
+    * ``"auto"``      — compile the model to a separable
+      :class:`~repro.kernels.fused_leapfrog.PotentialSpec` when possible
+      and run the fused n-step integrator (one Pallas launch on TPU,
+      analytic-gradient scan elsewhere); fall back to the reference
+      autodiff leapfrog otherwise.
+    * ``"fused"``     — require the fused integrator (raise if the model
+      is not separable).
+    * ``"reference"`` — always use the autodiff leapfrog.
+
+    ``inv_mass`` is an optional DIAGONAL inverse mass-matrix (flat
+    vector over the unconstrained state). Momentum sampling, kinetic
+    energy and the velocity update all read it through ONE code path
+    (``hmc_transition``), shared by both integrators.
+    """
 
     step_size: float = 0.1
     n_leapfrog: int = 4
     adapt_step_size: bool = False
     target_accept: float = 0.8
     backend: str = "fused"  # log-density backend (see make_logdensity_fn)
+    leapfrog: str = "auto"  # "auto" | "fused" | "reference"
+    inv_mass: Optional[Any] = None  # diagonal inverse mass (flat vector)
+
+    @property
+    def uses_potential_spec(self) -> bool:
+        """Whether drivers should try to compile a PotentialSpec for this
+        sampler (``run_chains`` checks this before ``make_kernel``)."""
+        return self.leapfrog != "reference"
 
     # -- typed, fully-compiled path ------------------------------------------
     def run(self, key, m: Model, num_samples: int,
@@ -152,53 +207,40 @@ class HMC:
         tvi = (init_varinfo if init_varinfo is not None
                else m.typed_varinfo(k_init)).link()
         logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
-
-        def ld_and_grad(q):
-            return jax.value_and_grad(logdensity)(q)
-
-        da = DualAveraging(target_accept=self.target_accept)
-
-        def hmc_step(q, logp, grad, step_size, key):
-            return hmc_transition(ld_and_grad, q, logp, grad, step_size, key,
-                                  self.n_leapfrog)
+        spec = None
+        if self.uses_potential_spec:
+            spec = build_potential_spec(m, tvi, ctx=ctx, backend=self.backend)
+        # ONE adaptation/transition code path for fused and reference
+        # integrators: everything below routes through the TransitionKernel
+        kern = self.make_kernel(logdensity, int(tvi.flat().shape[0]),
+                                spec=spec)
 
         def one_chain(key, q0):
-            logp0, grad0 = ld_and_grad(q0)
-
-            def warm_body(carry, inp):
-                q, logp, grad, da_state = carry
-                t, key = inp
-                step_size = jnp.exp(da_state[0]) if self.adapt_step_size \
-                    else jnp.asarray(self.step_size)
-                q, logp, grad, acc_prob, _ = hmc_step(q, logp, grad, step_size, key)
-                if self.adapt_step_size:
-                    da_state = da.update(da_state, acc_prob, t)
-                return (q, logp, grad, da_state), None
-
-            da_state = da.init(jnp.asarray(self.step_size))
+            state = kern.init(q0)
             if num_warmup > 0:
                 keys = jax.random.split(jax.random.fold_in(key, 1), num_warmup)
                 ts = jnp.arange(num_warmup, dtype=jnp.float32)
-                (q0, logp0, grad0, da_state), _ = jax.lax.scan(
-                    warm_body, (q0, logp0, grad0, da_state), (ts, keys))
-            # use the dual-averaged step only if adaptation actually ran:
-            # the smoothed iterate starts at exp(0)=1.0, not step_size
-            final_step = jnp.exp(da_state[1]) \
-                if (self.adapt_step_size and num_warmup > 0) \
-                else jnp.asarray(self.step_size)
 
-            def body(carry, key):
-                q, logp, grad = carry
-                q, logp, grad, acc_prob, accept = hmc_step(
-                    q, logp, grad, final_step, key)
-                out = (q, logp, acc_prob) if collect else (logp, acc_prob)
-                return (q, logp, grad), out
+                def warm_body(s, inp):
+                    t, k = inp
+                    return kern.warm(s, t, k), None
+
+                state, _ = jax.lax.scan(warm_body, state, (ts, keys))
+                # freeze the dual-averaged step only if adaptation actually
+                # ran: the smoothed iterate starts at exp(0)=1.0
+                state = kern.finalize(state)
+
+            def body(s, key):
+                s, o = kern.step(s, key)
+                out = ((o["q"], o["logp"], o["accept_prob"]) if collect
+                       else (o["logp"], o["accept_prob"]))
+                return s, out
 
             keys = jax.random.split(jax.random.fold_in(key, 2), num_samples)
-            (qf, logpf, _), outs = jax.lax.scan(body, (q0, logp0, grad0), keys)
+            state, outs = jax.lax.scan(body, state, keys)
             if collect:
                 return outs  # (qs, logps, accs)
-            return (qf, *outs)
+            return (state[0], *outs)
 
         if num_chains == 1:
             chain_fn = jax.jit(lambda k: one_chain(k, tvi.flat()))
@@ -225,7 +267,8 @@ class HMC:
                              stats={"logp": logps, "accept_prob": accs})
 
     # -- TransitionKernel protocol (run_chains driver) -------------------------
-    def make_kernel(self, logdensity: Callable, dim: int) -> TransitionKernel:
+    def make_kernel(self, logdensity: Callable, dim: int,
+                    spec=None) -> TransitionKernel:
         """Build the pure HMC :class:`TransitionKernel` for ``run_chains``.
 
         Parameters
@@ -235,6 +278,11 @@ class HMC:
             ``Model.make_logdensity_fn`` output — the fused hot path).
         dim : int
             Length of the flat unconstrained state.
+        spec : PotentialSpec, optional
+            Compiled separable potential (``repro.core.potential``).
+            When given (and ``leapfrog != "reference"``) the kernel uses
+            the fused integrator: analytic gradients and the whole
+            n-step leapfrog as one unit, no autodiff in the hot loop.
 
         Returns
         -------
@@ -244,9 +292,29 @@ class HMC:
             dual-averaging adaptation when ``adapt_step_size``.
         """
         del dim  # the state shape is carried by q itself
+        if self.leapfrog not in ("auto", "fused", "reference"):
+            raise ValueError(f"unknown leapfrog mode {self.leapfrog!r}")
+        if self.leapfrog == "fused" and spec is None:
+            raise ValueError(
+                "leapfrog='fused' requires a separable model (PotentialSpec "
+                "compilation failed or was not attempted); use "
+                "leapfrog='auto' to fall back to the reference integrator")
+        use_fused = spec is not None and self.leapfrog != "reference"
+        inv_mass = None if self.inv_mass is None \
+            else jnp.asarray(self.inv_mass, jnp.float32)
 
-        def ld_and_grad(q):
-            return jax.value_and_grad(logdensity)(q)
+        if use_fused:
+            def ld_and_grad(q):
+                return potential_value_and_grad(spec, q)
+
+            def leapfrog_fn(q, p, grad, eps, n):
+                return fused_leapfrog(spec, q, p, grad, eps, n,
+                                      inv_mass=inv_mass)
+        else:
+            def ld_and_grad(q):
+                return jax.value_and_grad(logdensity)(q)
+
+            leapfrog_fn = None
 
         da = DualAveraging(target_accept=self.target_accept)
 
@@ -259,7 +327,8 @@ class HMC:
             q, logp, grad, da_state, eps = state
             cur = jnp.exp(da_state[0]) if self.adapt_step_size else eps
             q, logp, grad, acc, _ = hmc_transition(
-                ld_and_grad, q, logp, grad, cur, key, self.n_leapfrog)
+                ld_and_grad, q, logp, grad, cur, key, self.n_leapfrog,
+                inv_mass=inv_mass, leapfrog_fn=leapfrog_fn)
             if self.adapt_step_size:
                 da_state = da.update(da_state, acc, t)
             return (q, logp, grad, da_state, eps)
@@ -273,7 +342,8 @@ class HMC:
         def step(state, key):
             q, logp, grad, da_state, eps = state
             q, logp, grad, acc, _ = hmc_transition(
-                ld_and_grad, q, logp, grad, eps, key, self.n_leapfrog)
+                ld_and_grad, q, logp, grad, eps, key, self.n_leapfrog,
+                inv_mass=inv_mass, leapfrog_fn=leapfrog_fn)
             out = {"q": q, "logp": logp, "accept_prob": acc}
             return (q, logp, grad, da_state, eps), out
 

@@ -18,9 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.model import Model
+from repro.core.potential import build_potential_spec
 from repro.core.varinfo import TypedVarInfo
 from repro.infer.chains import Chain, TransitionKernel
 from repro.infer.hmc import DualAveraging, HMC
+from repro.kernels.fused_leapfrog import potential_value_and_grad
 
 __all__ = ["NUTS"]
 
@@ -60,6 +62,31 @@ class NUTS:
     adapt_step_size: bool = True
     target_accept: float = 0.8
     backend: str = "fused"  # log-density backend (see make_logdensity_fn)
+    leapfrog: str = "auto"  # "auto" | "fused" | "reference"
+
+    @property
+    def uses_potential_spec(self) -> bool:
+        """Whether drivers should try to compile a PotentialSpec for this
+        sampler (``run_chains`` checks this before ``make_kernel``)."""
+        return self.leapfrog != "reference"
+
+    def _make_ld_grad(self, logdensity, spec):
+        """(logp, grad) evaluator for tree leaves.
+
+        With a compiled PotentialSpec the gradient is the analytic opcode
+        table (fused value+grad, zero autodiff); otherwise
+        ``jax.value_and_grad`` on the reference log-density.
+        """
+        if self.leapfrog not in ("auto", "fused", "reference"):
+            raise ValueError(f"unknown leapfrog mode {self.leapfrog!r}")
+        if self.leapfrog == "fused" and spec is None:
+            raise ValueError(
+                "leapfrog='fused' requires a separable model (PotentialSpec "
+                "compilation failed or was not attempted); use "
+                "leapfrog='auto' to fall back to autodiff gradients")
+        if spec is not None and self.leapfrog != "reference":
+            return lambda q: potential_value_and_grad(spec, q)
+        return jax.value_and_grad(logdensity)
 
     def _build_step(self, ld_grad, dim: int):
         """Build the single compiled NUTS transition.
@@ -208,14 +235,17 @@ class NUTS:
         return nuts_step
 
     # -- TransitionKernel protocol (run_chains driver) -------------------------
-    def make_kernel(self, logdensity, dim: int) -> TransitionKernel:
+    def make_kernel(self, logdensity, dim: int,
+                    spec=None) -> TransitionKernel:
         """Build the pure NUTS :class:`TransitionKernel` for ``run_chains``.
 
         State is ``(q, logp, grad, da_state, eps)``; ``step`` emits
         ``{"q", "logp", "accept_prob", "tree_depth"}`` per draw. Warmup
         runs dual-averaging on the mean subtree acceptance statistic.
+        ``spec`` (an optional compiled PotentialSpec) swaps the tree-leaf
+        gradient for the fused analytic evaluator.
         """
-        ld_grad = jax.value_and_grad(logdensity)
+        ld_grad = self._make_ld_grad(logdensity, spec)
         nuts_step = self._build_step(ld_grad, dim)
         da = DualAveraging(target_accept=self.target_accept)
 
@@ -254,7 +284,10 @@ class NUTS:
         tvi = (init_varinfo if init_varinfo is not None
                else m.typed_varinfo(k_init)).link()
         logdensity = m.make_logdensity_fn(tvi, backend=self.backend)
-        ld_grad = jax.value_and_grad(logdensity)
+        spec = None
+        if self.uses_potential_spec:
+            spec = build_potential_spec(m, tvi, backend=self.backend)
+        ld_grad = self._make_ld_grad(logdensity, spec)
         dim = int(tvi.flat().shape[0])
         da = DualAveraging(target_accept=self.target_accept)
         nuts_step = self._build_step(ld_grad, dim)

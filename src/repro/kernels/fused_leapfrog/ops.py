@@ -1,0 +1,161 @@
+"""Public entry points for the fused leapfrog / fused potential.
+
+``fused_leapfrog(spec, q, p, grad, eps, n_steps)`` runs the whole
+integrator as one unit:
+
+* on TPU — a single Pallas launch (``kernel.py``): analytic elementwise
+  gradient, position/momentum updates and the final-energy reduction all
+  fused, state resident on-chip across steps;
+* elsewhere — the jnp oracle (``ref.py``): same arithmetic, still zero
+  autodiff (the backward-pass elimination is what makes the fused path
+  beat ``jax.value_and_grad``-based leapfrog on every backend).
+
+Both paths take/return flat ``(dim,)`` vectors and match
+``repro.infer.hmc._leapfrog``'s (q, p, logp, grad) contract, so the HMC
+transition can swap integrators without touching the MH correction.
+
+No custom VJP is provided: MCMC transitions are never differentiated
+through.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_leapfrog import kernel as K
+from repro.kernels.fused_leapfrog import ref
+from repro.kernels.fused_leapfrog.spec import OP_ZERO, PotentialSpec
+
+__all__ = ["fused_leapfrog", "potential_value_and_grad"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _spec_tiles(spec: PotentialSpec, block_rows: int):
+    """Static (numpy) coefficient tiles padded to (rows, 128).
+
+    Padding uses all-zero coefficients — every opcode yields exactly
+    0 value / 0 gradient at zero coefficients, so padded lanes are
+    inert without masks. The opcode pad preserves ``uniform_op``
+    specialisation when one is set.
+    """
+    per_block = block_rows * K.LANE
+    n = spec.dim
+    n_pad = max(per_block, ((n + per_block - 1) // per_block) * per_block)
+    pad_op = spec.uniform_op if spec.uniform_op is not None else OP_ZERO
+
+    def tiles(a, fill, dtype):
+        out = np.full((n_pad,), fill, dtype)
+        out[:n] = a
+        return jnp.asarray(out.reshape(-1, K.LANE))
+
+    return (tiles(spec.op, pad_op, np.int32),
+            tiles(spec.c0, 0.0, np.float32),
+            tiles(spec.c1, 0.0, np.float32),
+            tiles(spec.c2, 0.0, np.float32),
+            tiles(spec.c3, 0.0, np.float32),
+            n_pad)
+
+
+def _vec_tiles(x, n_pad: int):
+    x = jnp.ravel(jnp.asarray(x, jnp.float32))
+    return jnp.pad(x, (0, n_pad - x.shape[0])).reshape(-1, K.LANE)
+
+
+def fused_leapfrog(spec: PotentialSpec, q, p, grad, step_size, n_steps: int,
+                   *, inv_mass=None, use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None, block_rows: int = 256):
+    """n-step leapfrog on a separable potential; returns (q, p, logp, grad).
+
+    Parameters
+    ----------
+    spec : PotentialSpec
+        Compiled separable potential (``repro.core.potential``).
+    q, p, grad : jax.Array, shape ``(dim,)``
+        Position, momentum and the potential gradient at ``q``.
+    step_size : float or scalar jax.Array
+        Leapfrog step size (may be traced — warmup adapts it).
+    n_steps : int
+        Static number of leapfrog steps.
+    inv_mass : jax.Array, optional
+        Diagonal inverse mass (velocity = inv_mass * momentum);
+        ``None`` = identity metric.
+    use_pallas : bool, optional
+        Force (True) / forbid (False) the Pallas kernel; default
+        auto-selects it on TPU, jnp oracle elsewhere.
+    interpret : bool, optional
+        Pallas interpret mode (validation off-TPU).
+
+    Returns
+    -------
+    (q, p, logp, grad)
+        Final state; ``logp`` is the full potential (incl. spec const)
+        at the final position — same contract as ``hmc._leapfrog``.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.leapfrog_ref(spec, q, p, grad, step_size, n_steps,
+                                inv_mass=inv_mass)
+    if interpret is None:
+        interpret = _auto_interpret()
+    op, c0, c1, c2, c3, n_pad = _spec_tiles(spec, block_rows)
+    dim = spec.dim
+    br = min(block_rows, n_pad // K.LANE)
+    eps = jnp.asarray(step_size, jnp.float32).reshape(1, 1)
+    q2 = _vec_tiles(q, n_pad)
+    p2 = _vec_tiles(p, n_pad)
+    g2 = _vec_tiles(grad, n_pad)
+    im2 = None if inv_mass is None else _vec_tiles(inv_mass, n_pad)
+    qf, pf, gf, lp = _leapfrog_impl(
+        eps, q2, p2, g2, op, c0, c1, c2, c3, im2, n_steps=n_steps,
+        uniform_op=spec.uniform_op, block_rows=br, interpret=interpret)
+    return (qf.ravel()[:dim], pf.ravel()[:dim],
+            lp + jnp.float32(spec.const), gf.ravel()[:dim])
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "uniform_op",
+                                             "block_rows", "interpret"))
+def _leapfrog_impl(eps, q, p, g, op, c0, c1, c2, c3, im, *, n_steps: int,
+                   uniform_op, block_rows: int, interpret: bool):
+    return K.leapfrog_2d(eps, q, p, g, op, c0, c1, c2, c3, im, n_steps,
+                         uniform_op, block_rows, interpret)
+
+
+def potential_value_and_grad(spec: PotentialSpec, u,
+                             *, use_pallas: Optional[bool] = None,
+                             interpret: Optional[bool] = None,
+                             block_rows: int = 256):
+    """Fused analytic ``(logp, grad)`` of the compiled potential at ``u``.
+
+    Pallas on TPU, jnp oracle elsewhere (same dispatch as
+    ``fused_leapfrog``). Used for chain init and NUTS tree leaves, where
+    only a single evaluation (not a whole trajectory) is needed.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.potential_value_and_grad_ref(spec, u)
+    if interpret is None:
+        interpret = _auto_interpret()
+    op, c0, c1, c2, c3, n_pad = _spec_tiles(spec, block_rows)
+    br = min(block_rows, n_pad // K.LANE)
+    u2 = _vec_tiles(u, n_pad)
+    gf, lp = _potential_vg_impl(u2, op, c0, c1, c2, c3,
+                                uniform_op=spec.uniform_op,
+                                block_rows=br, interpret=interpret)
+    return lp + jnp.float32(spec.const), gf.ravel()[:spec.dim]
+
+
+@functools.partial(jax.jit, static_argnames=("uniform_op", "block_rows",
+                                             "interpret"))
+def _potential_vg_impl(u, op, c0, c1, c2, c3, *, uniform_op,
+                       block_rows: int, interpret: bool):
+    return K.potential_vg_2d(u, op, c0, c1, c2, c3, uniform_op,
+                             block_rows, interpret)

@@ -1,0 +1,69 @@
+"""jnp oracles for the fused leapfrog (the off-TPU production path).
+
+``leapfrog_ref`` reproduces ``repro.infer.hmc._leapfrog`` arithmetic
+exactly — same velocity-Verlet ordering, same final-energy convention —
+but with the log-density value/gradient computed from the separable
+:class:`PotentialSpec` analytically, so there is NO autodiff backward
+pass anywhere in the step. That removal of the VJP graph is where the
+CPU/GPU speedup comes from; on TPU the same program fuses further into
+a single Pallas launch (``kernel.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_leapfrog.spec import (OP_NORMAL, OP_ZERO,
+                                               PotentialSpec,
+                                               potential_elem_grad,
+                                               potential_elem_value)
+
+__all__ = ["potential_value_and_grad_ref", "leapfrog_ref"]
+
+
+def potential_value_and_grad_ref(spec: PotentialSpec, u):
+    """Analytic ``(logp, dlogp/du)`` of the compiled potential at ``u``."""
+    op, c0, c1, c2, c3 = spec.coeff_arrays()
+    u = jnp.asarray(u, jnp.float32)
+    v = potential_elem_value(op, c0, c1, c2, c3, u,
+                             uniform_op=spec.uniform_op)
+    g = potential_elem_grad(op, c0, c1, c2, c3, u,
+                            uniform_op=spec.uniform_op)
+    return jnp.sum(v) + jnp.float32(spec.const), g
+
+
+def leapfrog_ref(spec: PotentialSpec, q, p, grad, step_size, n_steps: int,
+                 inv_mass=None):
+    """n-step leapfrog on the separable potential. Returns (q, p, logp, grad).
+
+    Matches ``repro.infer.hmc._leapfrog`` step ordering with an optional
+    diagonal ``inv_mass`` metric (velocity = inv_mass * momentum). The
+    potential value is only needed once, at the final position.
+    """
+    op, c0, c1, c2, c3 = spec.coeff_arrays()
+    uop = spec.uniform_op
+    im = None if inv_mass is None else jnp.asarray(inv_mass, jnp.float32)
+
+    def body(carry, _):
+        q, p, grad = carry
+        p_half = p + 0.5 * step_size * grad
+        vel = p_half if im is None else im * p_half
+        q_new = q + step_size * vel
+        grad_new = potential_elem_grad(op, c0, c1, c2, c3, q_new,
+                                       uniform_op=uop)
+        p_new = p_half + 0.5 * step_size * grad_new
+        return (q_new, p_new, grad_new), None
+
+    # Unroll fully only for transcendental-free potentials (pure
+    # Gaussian/flat): there the per-step chains fuse into one XLA
+    # computation and scan's per-iteration overhead disappears. For
+    # exp/log-bearing opcodes XLA-CPU's big unrolled fusions LOSE the
+    # vectorised transcendental loops, so the rolled scan is faster —
+    # measured, not guessed (see BENCH_leapfrog.json).
+    unroll = n_steps if uop in (OP_ZERO, OP_NORMAL) else 1
+    (q, p, grad), _ = jax.lax.scan(body, (q, p, grad), None, length=n_steps,
+                                   unroll=unroll)
+    logp = jnp.sum(potential_elem_value(op, c0, c1, c2, c3, q,
+                                        uniform_op=uop)) \
+        + jnp.float32(spec.const)
+    return q, p, logp, grad

@@ -1,4 +1,5 @@
 from repro.kernels.fused_logpdf.ops import (  # noqa: F401
     SITE_BLOCK_FAMILIES, bernoulli_logits_logpmf_sum,
-    categorical_logits_logpmf_sum, normal_logpdf_sum, site_block_sum,
-    std_normal_logpdf_sum)
+    beta_unnorm_logpdf_sum, categorical_logits_logpmf_sum,
+    gamma_unnorm_logpdf_sum, mvnormal_prec_quadform_sum, normal_logpdf_sum,
+    site_block_sum, std_normal_logpdf_sum, student_t_unnorm_logpdf_sum)

@@ -146,6 +146,101 @@ def _categorical_kernel(l_ref, y_ref, o_ref, acc_ref, *, n_valid: int,
 
 
 # ---------------------------------------------------------------------------
+# Gamma / Beta / Student-t: elementwise reduce kernels over the streamed
+# (unnormalised) terms. gammaln has no Mosaic lowering, so the analytic
+# normalisers are accumulated OUTSIDE the kernel by the fused evaluators —
+# the same split std_normal uses for -sum(log scale).
+# ---------------------------------------------------------------------------
+def _gamma_kernel(x_ref, am1_ref, rate_ref, o_ref, acc_ref, *, n_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    am1 = am1_ref[...].astype(jnp.float32)
+    rate = rate_ref[...].astype(jnp.float32)
+    lp = am1 * jnp.log(x) - rate * x
+    lp = jnp.where(_mask_block(i, x.shape[0], n_valid), lp, 0.0)
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+def _beta_kernel(x_ref, am1_ref, bm1_ref, o_ref, acc_ref, *, n_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    am1 = am1_ref[...].astype(jnp.float32)
+    bm1 = bm1_ref[...].astype(jnp.float32)
+    lp = am1 * jnp.log(x) + bm1 * jnp.log1p(-x)
+    lp = jnp.where(_mask_block(i, x.shape[0], n_valid), lp, 0.0)
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+def _student_t_kernel(z_ref, df_ref, o_ref, acc_ref, *, n_valid: int):
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = z_ref[...].astype(jnp.float32)
+    df = df_ref[...].astype(jnp.float32)
+    lp = -0.5 * (df + 1.0) * jnp.log1p(z * z / df)
+    lp = jnp.where(_mask_block(i, z.shape[0], n_valid), lp, 0.0)
+    acc_ref[...] += jnp.sum(lp.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# Dense MvNormal quadratic form: xc (N, D) rows against one precision P
+# (D, D), flash-attention-style — the xc row-block stays VMEM-resident
+# while the grid streams P column-blocks through the MXU; only the scalar
+# leaves the kernel. Zero-padding of xc/P makes padded rows/cols contribute
+# exactly 0, so no masks are needed.
+# ---------------------------------------------------------------------------
+def _mvn_quad_kernel(x_ref, p_ref, o_ref, acc_ref, *, block_cols: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    ni = pl.num_programs(0)
+    nj = pl.num_programs(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xc = x_ref[...].astype(jnp.float32)            # (bn, Dp) full rows
+    pj = p_ref[...].astype(jnp.float32)            # (Dp, bc) column block
+    t = jnp.dot(xc, pj, preferred_element_type=jnp.float32)  # (bn, bc) MXU
+    xcj = jax.lax.dynamic_slice(xc, (0, j * block_cols),
+                                (xc.shape[0], block_cols))
+    part = t * xcj                                  # (bn, bc)
+    acc_ref[...] += jnp.sum(part.reshape(-1, SUB, LANE), axis=0)
+
+    @pl.when((i == ni - 1) & (j == nj - 1))
+    def _fin():
+        o_ref[0, 0] = -0.5 * jnp.sum(acc_ref[...])
+
+
+# ---------------------------------------------------------------------------
 # pallas_call builders
 # ---------------------------------------------------------------------------
 def _reduce_call(kernel, n_inputs: int, rows: int, block_rows: int,
@@ -192,6 +287,57 @@ def bernoulli_logit_sum_2d(logits, y, n_valid: int, block_rows: int,
     call = _reduce_call(kern, 2, rows, block_rows, LANE, (SUB, LANE),
                         None, interpret, "fused_bernoulli_logpdf")
     return call(logits, y)[0, 0]
+
+
+def gamma_sum_2d(x, am1, rate, n_valid: int, block_rows: int,
+                 interpret: bool):
+    rows = x.shape[0]
+    kern = functools.partial(_gamma_kernel, n_valid=n_valid)
+    call = _reduce_call(kern, 3, rows, block_rows, LANE, (SUB, LANE),
+                        None, interpret, "fused_gamma_logpdf")
+    return call(x, am1, rate)[0, 0]
+
+
+def beta_sum_2d(x, am1, bm1, n_valid: int, block_rows: int,
+                interpret: bool):
+    rows = x.shape[0]
+    kern = functools.partial(_beta_kernel, n_valid=n_valid)
+    call = _reduce_call(kern, 3, rows, block_rows, LANE, (SUB, LANE),
+                        None, interpret, "fused_beta_logpdf")
+    return call(x, am1, bm1)[0, 0]
+
+
+def student_t_sum_2d(z, df, n_valid: int, block_rows: int,
+                     interpret: bool):
+    rows = z.shape[0]
+    kern = functools.partial(_student_t_kernel, n_valid=n_valid)
+    call = _reduce_call(kern, 2, rows, block_rows, LANE, (SUB, LANE),
+                        None, interpret, "fused_student_t_logpdf")
+    return call(z, df)[0, 0]
+
+
+def mvn_quad_sum_2d(xc, prec, block_rows: int, block_cols: int,
+                    interpret: bool):
+    """xc (Np, Dp), prec (Dp, Dp) — both zero-padded to tile multiples."""
+    np_, dp = xc.shape
+    grid = (np_ // block_rows, dp // block_cols)
+    kern = functools.partial(_mvn_quad_kernel, block_cols=block_cols)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((dp, block_cols), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((SUB, LANE), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="fused_mvn_quadform",
+    )(xc, prec)[0, 0]
 
 
 def categorical_sum_2d(logits, labels, n_valid: int, c_valid: int,

@@ -25,6 +25,8 @@ from repro.kernels.fused_logpdf import ref
 
 __all__ = ["normal_logpdf_sum", "std_normal_logpdf_sum",
            "bernoulli_logits_logpmf_sum", "categorical_logits_logpmf_sum",
+           "gamma_unnorm_logpdf_sum", "beta_unnorm_logpdf_sum",
+           "student_t_unnorm_logpdf_sum", "mvnormal_prec_quadform_sum",
            "site_block_sum", "SITE_BLOCK_FAMILIES"]
 
 
@@ -32,13 +34,18 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _to_tiles(x, block_rows: int):
-    """Flatten to 1-D, pad to (rows, 128) with rows % block_rows == 0."""
+def _to_tiles(x, block_rows: int, pad_value: float = 0.0):
+    """Flatten to 1-D, pad to (rows, 128) with rows % block_rows == 0.
+
+    ``pad_value`` picks the fill so padding slots stay finite through the
+    kernel's elementwise math (e.g. 1.0 for a log() input) — padded lanes
+    are masked out of the reduction regardless.
+    """
     flat = jnp.ravel(x)
     n = flat.shape[0]
     per_block = block_rows * K.LANE
     n_pad = ((n + per_block - 1) // per_block) * per_block
-    flat = jnp.pad(flat, (0, n_pad - n))
+    flat = jnp.pad(flat, (0, n_pad - n), constant_values=pad_value)
     return flat.reshape(-1, K.LANE), n
 
 
@@ -267,10 +274,224 @@ _cat_sum_vjp.defvjp(_cat_sum_fwd, _cat_sum_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Gamma — streamed part sum((a-1) log x - b x); normaliser with the caller
+# ---------------------------------------------------------------------------
+def gamma_unnorm_logpdf_sum(x, am1, rate, *, block_rows: int = 256,
+                            interpret: Optional[bool] = None):
+    """``sum(am1 * log(x) - rate * x)`` as one fused VMEM reduce.
+
+    The Gamma normaliser ``a log b - gammaln(a)`` has no Pallas lowering
+    and is accumulated analytically by the fused evaluator; this kernel
+    streams only the x-dependent terms. All three inputs must share one
+    shape (pre-broadcast by the caller). Differentiable (analytic
+    custom_vjp): ``dx = am1/x - rate``, ``dam1 = log x``, ``drate = -x``.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    x = jnp.asarray(x, jnp.float32)
+    am1 = jnp.broadcast_to(jnp.asarray(am1, jnp.float32), x.shape)
+    rate = jnp.broadcast_to(jnp.asarray(rate, jnp.float32), x.shape)
+    return _gamma_sum_vjp(x, am1, rate, block_rows, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _gamma_sum_vjp(x, am1, rate, block_rows, interpret):
+    return _gamma_sum_impl(x, am1, rate, block_rows=block_rows,
+                           interpret=interpret)
+
+
+def _gamma_sum_fwd(x, am1, rate, block_rows, interpret):
+    out = _gamma_sum_impl(x, am1, rate, block_rows=block_rows,
+                          interpret=interpret)
+    return out, (x, am1, rate)
+
+
+def _gamma_sum_bwd(block_rows, interpret, res, g):
+    x, am1, rate = res
+    return g * (am1 / x - rate), g * jnp.log(x), g * (-x)
+
+
+_gamma_sum_vjp.defvjp(_gamma_sum_fwd, _gamma_sum_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _gamma_sum_impl(x, am1, rate, *, block_rows: int, interpret: bool):
+    # pad x with 1s: log(1)=0 keeps the padded lanes NaN-free
+    x2, n = _to_tiles(x, block_rows, pad_value=1.0)
+    am12, _ = _to_tiles(am1, block_rows)
+    rate2, _ = _to_tiles(rate, block_rows)
+    br = min(block_rows, x2.shape[0])
+    return K.gamma_sum_2d(x2, am12, rate2, n, br, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Beta — streamed part sum((a-1) log x + (b-1) log1p(-x))
+# ---------------------------------------------------------------------------
+def beta_unnorm_logpdf_sum(x, am1, bm1, *, block_rows: int = 256,
+                           interpret: Optional[bool] = None):
+    """``sum(am1 * log(x) + bm1 * log1p(-x))`` as one fused VMEM reduce.
+
+    The log-beta-function normaliser is the caller's business (no gammaln
+    in Pallas). ``x`` must lie strictly inside (0, 1). Differentiable
+    (analytic custom_vjp): ``dx = am1/x - bm1/(1-x)``.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    x = jnp.asarray(x, jnp.float32)
+    am1 = jnp.broadcast_to(jnp.asarray(am1, jnp.float32), x.shape)
+    bm1 = jnp.broadcast_to(jnp.asarray(bm1, jnp.float32), x.shape)
+    return _beta_sum_vjp(x, am1, bm1, block_rows, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _beta_sum_vjp(x, am1, bm1, block_rows, interpret):
+    return _beta_sum_impl(x, am1, bm1, block_rows=block_rows,
+                          interpret=interpret)
+
+
+def _beta_sum_fwd(x, am1, bm1, block_rows, interpret):
+    out = _beta_sum_impl(x, am1, bm1, block_rows=block_rows,
+                         interpret=interpret)
+    return out, (x, am1, bm1)
+
+
+def _beta_sum_bwd(block_rows, interpret, res, g):
+    x, am1, bm1 = res
+    return (g * (am1 / x - bm1 / (1.0 - x)),
+            g * jnp.log(x), g * jnp.log1p(-x))
+
+
+_beta_sum_vjp.defvjp(_beta_sum_fwd, _beta_sum_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _beta_sum_impl(x, am1, bm1, *, block_rows: int, interpret: bool):
+    # pad x with 0.5: both log(x) and log1p(-x) stay finite on padding
+    x2, n = _to_tiles(x, block_rows, pad_value=0.5)
+    am12, _ = _to_tiles(am1, block_rows)
+    bm12, _ = _to_tiles(bm1, block_rows)
+    br = min(block_rows, x2.shape[0])
+    return K.beta_sum_2d(x2, am12, bm12, n, br, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Student-t — streamed part sum(-(df+1)/2 log1p(z^2/df)) on standardised z
+# ---------------------------------------------------------------------------
+def student_t_unnorm_logpdf_sum(z, df, *, block_rows: int = 256,
+                                interpret: Optional[bool] = None):
+    """``sum(-(df+1)/2 * log1p(z^2/df))`` as one fused VMEM reduce.
+
+    ``z = (x - loc)/scale`` is standardised by the caller (like
+    ``std_normal``); the gammaln / ``-log scale`` normaliser is accumulated
+    analytically outside. Differentiable (analytic custom_vjp):
+    ``dz = -(df+1) z / (df + z^2)``.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    z = jnp.asarray(z, jnp.float32)
+    df = jnp.broadcast_to(jnp.asarray(df, jnp.float32), z.shape)
+    return _student_t_sum_vjp(z, df, block_rows, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _student_t_sum_vjp(z, df, block_rows, interpret):
+    return _student_t_sum_impl(z, df, block_rows=block_rows,
+                               interpret=interpret)
+
+
+def _student_t_sum_fwd(z, df, block_rows, interpret):
+    out = _student_t_sum_impl(z, df, block_rows=block_rows,
+                              interpret=interpret)
+    return out, (z, df)
+
+
+def _student_t_sum_bwd(block_rows, interpret, res, g):
+    z, df = res
+    z2 = z * z
+    dz = g * (-(df + 1.0) * z / (df + z2))
+    ddf = g * (-0.5 * jnp.log1p(z2 / df)
+               + 0.5 * (df + 1.0) * z2 / (df * (df + z2)))
+    return dz, ddf
+
+
+_student_t_sum_vjp.defvjp(_student_t_sum_fwd, _student_t_sum_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _student_t_sum_impl(z, df, *, block_rows: int, interpret: bool):
+    z2, n = _to_tiles(z, block_rows)
+    # pad df with 1s: log1p(z^2/df) stays finite on padding
+    df2, _ = _to_tiles(df, block_rows, pad_value=1.0)
+    br = min(block_rows, z2.shape[0])
+    return K.student_t_sum_2d(z2, df2, n, br, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Dense MvNormal quadratic form — flash-style tiled xc @ P reduce
+# ---------------------------------------------------------------------------
+def mvnormal_prec_quadform_sum(xc, prec, *, block_rows: int = 256,
+                               interpret: Optional[bool] = None):
+    """``-0.5 * sum_n xc_n^T P xc_n`` as one tiled MXU launch.
+
+    Parameters
+    ----------
+    xc : jax.Array, shape ``(N, D)``
+        Centred observations ``x - loc``, one row per event.
+    prec : jax.Array, shape ``(D, D)``
+        Dense precision matrix ``P = L^-T L^-1`` (precomputed by the
+        caller from the Cholesky factor; assumed symmetric).
+
+    The ``-N (sum log diag L + D/2 log 2 pi)`` normaliser is accumulated
+    analytically by the fused evaluator. Differentiable (analytic
+    custom_vjp): ``dxc = -0.5 (P + P^T) xc``, ``dP = -0.5 xc^T xc``.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    xc = jnp.asarray(xc, jnp.float32)
+    prec = jnp.asarray(prec, jnp.float32)
+    return _mvn_quad_vjp(xc, prec, block_rows, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _mvn_quad_vjp(xc, prec, block_rows, interpret):
+    return _mvn_quad_impl(xc, prec, block_rows=block_rows,
+                          interpret=interpret)
+
+
+def _mvn_quad_fwd(xc, prec, block_rows, interpret):
+    out = _mvn_quad_impl(xc, prec, block_rows=block_rows,
+                         interpret=interpret)
+    return out, (xc, prec)
+
+
+def _mvn_quad_bwd(block_rows, interpret, res, g):
+    xc, prec = res
+    dxc = (-0.5 * g) * (xc @ (prec + prec.T))
+    dprec = (-0.5 * g) * (xc.T @ xc)
+    return dxc, dprec
+
+
+_mvn_quad_vjp.defvjp(_mvn_quad_fwd, _mvn_quad_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _mvn_quad_impl(xc, prec, *, block_rows: int, interpret: bool):
+    n, d = xc.shape
+    dp = ((d + K.LANE - 1) // K.LANE) * K.LANE
+    br = min(block_rows, max(K.SUB, ((n + K.SUB - 1) // K.SUB) * K.SUB))
+    n_pad = ((n + br - 1) // br) * br
+    # zero padding: padded rows/cols contribute exactly 0 to the quadform
+    xc2 = jnp.pad(xc, ((0, n_pad - n), (0, dp - d)))
+    prec2 = jnp.pad(prec, ((0, dp - d), (0, dp - d)))
+    return K.mvn_quad_sum_2d(xc2, prec2, br, K.LANE, interpret)
+
+
+# ---------------------------------------------------------------------------
 # site_block_sum — the flat-buffer log-joint entry point
 # ---------------------------------------------------------------------------
 SITE_BLOCK_FAMILIES = ("std_normal", "normal", "bernoulli_logits",
-                       "categorical_logits")
+                       "categorical_logits", "gamma", "beta", "student_t",
+                       "mvnormal_prec")
 
 
 def site_block_sum(family: str, segments: Sequence[Tuple],
@@ -298,6 +519,16 @@ def site_block_sum(family: str, segments: Sequence[Tuple],
         * ``"categorical_logits"`` — segments ``(logits, labels)`` with
           ``logits (N_i, C)`` and ``labels (N_i,)`` int; all segments in one
           call must share ``C``.
+        * ``"gamma"``       — segments ``(x, a - 1, rate)``, each 1-D;
+          streamed part only (``a log b - gammaln(a)`` stays with the
+          caller, like the std_normal Jacobian term).
+        * ``"beta"``        — segments ``(x, a - 1, b - 1)``, each 1-D;
+          log-beta normaliser stays with the caller.
+        * ``"student_t"``   — segments ``(z, df)``, 1-D standardised
+          values; gammaln / log-scale normaliser stays with the caller.
+        * ``"mvnormal_prec"`` — segments ``(xc (N_i, D), prec (D, D))``;
+          each segment keeps its own precision, so segments are evaluated
+          per-launch (not concatenated) and summed.
     segments : sequence of tuples of jax.Array
         Per-site flattened parameter/value blocks as above.
     use_pallas : bool, optional
@@ -321,6 +552,16 @@ def site_block_sum(family: str, segments: Sequence[Tuple],
         return jnp.zeros((), jnp.float32)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    if family == "mvnormal_prec":
+        # each segment carries its own precision matrix: one launch per site
+        total = jnp.zeros((), jnp.float32)
+        for xc, prec in segments:
+            if use_pallas:
+                total = total + mvnormal_prec_quadform_sum(
+                    xc, prec, interpret=interpret)
+            else:
+                total = total + ref.mvnormal_prec_quadform_sum_ref(xc, prec)
+        return total
     if len(segments) == 1:
         cols = segments[0]
     else:
@@ -341,6 +582,21 @@ def site_block_sum(family: str, segments: Sequence[Tuple],
         if use_pallas:
             return bernoulli_logits_logpmf_sum(logits, y, interpret=interpret)
         return ref.bernoulli_logits_logpmf_sum_ref(logits, y)
+    if family == "gamma":
+        x, am1, rate = cols
+        if use_pallas:
+            return gamma_unnorm_logpdf_sum(x, am1, rate, interpret=interpret)
+        return ref.gamma_unnorm_logpdf_sum_ref(x, am1, rate)
+    if family == "beta":
+        x, am1, bm1 = cols
+        if use_pallas:
+            return beta_unnorm_logpdf_sum(x, am1, bm1, interpret=interpret)
+        return ref.beta_unnorm_logpdf_sum_ref(x, am1, bm1)
+    if family == "student_t":
+        z, df = cols
+        if use_pallas:
+            return student_t_unnorm_logpdf_sum(z, df, interpret=interpret)
+        return ref.student_t_unnorm_logpdf_sum_ref(z, df)
     logits, labels = cols
     if use_pallas:
         return categorical_logits_logpmf_sum(logits, labels,

@@ -34,3 +34,43 @@ def categorical_logits_logpmf_sum_ref(logits, labels):
     labels = jnp.asarray(labels, jnp.int32).reshape(-1)
     logp = jax.nn.log_softmax(logits, axis=-1)
     return jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# New families: the kernels stream only the log/exp terms; gammaln-style
+# normalisers are accumulated analytically by the fused evaluators (see
+# interpreters._fusible_parts), matching the std_normal split.
+# ---------------------------------------------------------------------------
+def gamma_unnorm_logpdf_sum_ref(x, am1, rate):
+    """``sum((a-1) log x - b x)`` — Gamma kernel part (no ``a log b -
+    gammaln(a)``)."""
+    x = jnp.asarray(x, jnp.float32)
+    am1 = jnp.asarray(am1, jnp.float32)
+    rate = jnp.asarray(rate, jnp.float32)
+    return jnp.sum(am1 * jnp.log(x) - rate * x)
+
+
+def beta_unnorm_logpdf_sum_ref(x, am1, bm1):
+    """``sum((a-1) log x + (b-1) log(1-x))`` — Beta kernel part (no
+    log-beta-function normaliser)."""
+    x = jnp.asarray(x, jnp.float32)
+    am1 = jnp.asarray(am1, jnp.float32)
+    bm1 = jnp.asarray(bm1, jnp.float32)
+    return jnp.sum(am1 * jnp.log(x) + bm1 * jnp.log1p(-x))
+
+
+def student_t_unnorm_logpdf_sum_ref(z, df):
+    """``sum(-(df+1)/2 log1p(z^2/df))`` on standardised ``z`` — Student-t
+    kernel part (no gammaln / log-scale normaliser)."""
+    z = jnp.asarray(z, jnp.float32)
+    df = jnp.asarray(df, jnp.float32)
+    return jnp.sum(-0.5 * (df + 1.0) * jnp.log1p(z * z / df))
+
+
+def mvnormal_prec_quadform_sum_ref(xc, prec):
+    """``-0.5 sum_n xc_n^T P xc_n`` for centred rows ``xc (N, D)`` and a
+    dense precision ``P (D, D)`` — the dense-MvNormal kernel part (the
+    ``-N (log det L + D/2 log 2 pi)`` normaliser stays with the caller)."""
+    xc = jnp.asarray(xc, jnp.float32)
+    prec = jnp.asarray(prec, jnp.float32)
+    return -0.5 * jnp.sum(jnp.dot(xc, prec) * xc)

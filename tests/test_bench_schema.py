@@ -1,0 +1,102 @@
+"""Bench JSON schema: validator behaviour + committed baselines + smoke.
+
+The timing benches themselves are too slow for tier-1, but everything
+around them is cheap to pin: the schema validator's accept/reject
+logic, a full write/read roundtrip, the (pure-arithmetic) roofline
+report, and the baselines committed at the repo root staying
+schema-valid.
+"""
+import os
+
+import pytest
+
+from benchmarks.bench_io import (SCHEMA_VERSION, entry, make_report,
+                                 read_report, validate_report, write_report)
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+
+
+def _good_report():
+    return make_report("unit", [entry("a/b", 1.5, speedup=2.0)],
+                       seed=0, warmup=1, repeats=2, backend="cpu")
+
+
+def test_valid_report_passes():
+    assert validate_report(_good_report()) == []
+
+
+def test_machine_metadata_present():
+    m = _good_report()["machine"]
+    for k in ("platform", "processor", "cpu_count", "python", "jax",
+              "backend"):
+        assert k in m, k
+    assert m["backend"] == "cpu"
+
+
+def test_config_records_seed_warmup_repeats():
+    c = _good_report()["config"]
+    assert (c["seed"], c["warmup"], c["repeats"]) == (0, 1, 2)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda r: r.pop("bench"),
+    lambda r: r.pop("machine"),
+    lambda r: r.__setitem__("schema_version", SCHEMA_VERSION + 1),
+    lambda r: r.__setitem__("entries", []),
+    lambda r: r["entries"][0].pop("us_per_call"),
+    lambda r: r["entries"][0].__setitem__("us_per_call", -1.0),
+    lambda r: r["config"].pop("seed"),
+])
+def test_invalid_reports_rejected(mutate):
+    r = _good_report()
+    mutate(r)
+    assert validate_report(r) != []
+
+
+def test_write_read_roundtrip(tmp_path):
+    p = str(tmp_path / "r.json")
+    rep = _good_report()
+    write_report(rep, p)
+    assert read_report(p) == rep
+
+
+def test_write_rejects_invalid(tmp_path):
+    rep = _good_report()
+    del rep["entries"]
+    with pytest.raises(ValueError):
+        write_report(rep, str(tmp_path / "bad.json"))
+
+
+def test_roofline_report_schema_valid():
+    """Smoke: the (cheap, arithmetic-only) roofline bench emits a valid
+    report with the fused-leapfrog traffic story in it."""
+    from benchmarks import roofline
+    rep = roofline.report()
+    assert validate_report(rep) == []
+    names = [e["name"] for e in rep["entries"]]
+    assert any("fused_leapfrog" in n for n in names)
+    assert any("fused_logpdf" in n for n in names)
+    for e in rep["entries"]:
+        assert e["extra"]["dominant"] in ("memory", "compute")
+
+
+@pytest.mark.parametrize("fname", ["BENCH_leapfrog.json",
+                                   "BENCH_logjoint.json",
+                                   "BENCH_roofline.json"])
+def test_committed_baselines_schema_valid(fname):
+    path = os.path.join(REPO_ROOT, fname)
+    assert os.path.exists(path), f"{fname} baseline not committed"
+    assert validate_report(read_report(path)) == []
+
+
+def test_committed_leapfrog_baseline_records_speedup():
+    """The acceptance record: fused beats reference >= 1.5x on the
+    committed baseline (headline model + geometric mean)."""
+    rep = read_report(os.path.join(REPO_ROOT, "BENCH_leapfrog.json"))
+    by_name = {e["name"]: e["extra"] for e in rep["entries"]}
+    assert by_name["leapfrog/gaussian_10k"]["speedup"] >= 1.5
+    assert by_name["leapfrog/geomean_supported"]["speedup"] >= 1.5
+    for name, x in by_name.items():
+        if x.get("supported") and "max_err_q" in x:
+            assert x["max_err_q"] < 1e-5, name
+            assert x["rel_err_logp"] < 1e-5, name
