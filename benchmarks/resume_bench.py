@@ -1,0 +1,154 @@
+"""Segmented driver overhead: ``run_chains`` single-scan vs segmented.
+
+The fault-tolerance PR cuts the multi-chain loop into
+``checkpoint_every``-sized jit(vmap(scan)) segments with host work
+between them (health checks; checkpointing DISABLED here — this bench
+isolates the segmentation cost itself). The acceptance bar is that the
+segmented driver stays within a few percent of the single-scan driver
+on the paper benchmark models: segment lengths are chosen uniform so
+each per-length program compiles once, and the host-side work between
+segments is O(num_chains) numpy.
+
+Both sides are timed end-to-end per ``run_chains`` call (which always
+re-traces — both drivers pay their own compile), trials INTERLEAVED so
+shared-host noise hits both contenders equally; ``extra`` records the
+overhead ratio and the segment layout.
+
+``python -m benchmarks.resume_bench [--fast] [--json PATH]`` writes the
+schema-valid report (``BENCH_resume.json`` at the repo root is the
+committed baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Optional
+
+SEED = 0
+WARMUP = 1
+REPEATS = 3
+MODELS = ("gauss_unknown", "logreg")
+
+
+def _cases(fast: bool, model: str):
+    # num_warmup/num_samples divisible by checkpoint_every: every segment
+    # has the same length, so the segmented driver compiles exactly one
+    # warm program and one sample program (plus init/finalize). Sizes are
+    # per model so chain EXECUTION dominates the per-call re-trace (both
+    # drivers pay their own compile; the segmented one traces four small
+    # programs vs the single-scan driver's one, a fixed cost that is not
+    # the segmentation overhead this bench is after) — the cheap model
+    # gets more draws, the expensive one fewer.
+    if fast:
+        return dict(num_warmup=100, num_samples=200, checkpoint_every=50,
+                    num_chains=4)
+    if model == "gauss_unknown":
+        return dict(num_warmup=800, num_samples=8000, checkpoint_every=400,
+                    num_chains=4)
+    return dict(num_warmup=400, num_samples=1600, checkpoint_every=200,
+                num_chains=4)
+
+
+def _measure(fast: bool) -> List[Dict]:
+    import jax
+
+    from repro.infer import HMC, run_chains
+    from repro.models import paper_suite
+
+    out = []
+    for name in MODELS:
+        cfg = _cases(fast, name)
+        pm = paper_suite.build(name)
+        kern = HMC(step_size=pm.step_size, n_leapfrog=pm.n_leapfrog,
+                   adapt_step_size=True)
+        key = jax.random.PRNGKey(SEED)
+        kw = dict(num_samples=cfg["num_samples"],
+                  num_warmup=cfg["num_warmup"],
+                  num_chains=cfg["num_chains"])
+
+        def legacy():
+            return run_chains(key, pm.model, kern, **kw)
+
+        def segmented():
+            return run_chains(key, pm.model, kern,
+                              checkpoint_every=cfg["checkpoint_every"], **kw)
+
+        for fn in (legacy, segmented):
+            for _ in range(WARMUP):
+                fn()
+        best = {"legacy": float("inf"), "segmented": float("inf")}
+        for _ in range(REPEATS):
+            for label, fn in (("legacy", legacy), ("segmented", segmented)):
+                t0 = time.perf_counter()
+                ch = fn()
+                best[label] = min(best[label], time.perf_counter() - t0)
+        draws = cfg["num_chains"] * cfg["num_samples"]
+        out.append({
+            "model": name,
+            "legacy_s": best["legacy"],
+            "segmented_s": best["segmented"],
+            "overhead": best["segmented"] / best["legacy"] - 1.0,
+            "us_per_draw_legacy": best["legacy"] / draws * 1e6,
+            "us_per_draw_segmented": best["segmented"] / draws * 1e6,
+            "health_ok": bool(ch.health.ok),
+            **cfg,
+        })
+    return out
+
+
+_RESULTS: Optional[List[Dict]] = None
+_FAST = False
+
+
+def _results(fast: bool) -> List[Dict]:
+    global _RESULTS, _FAST
+    if _RESULTS is None or fast != _FAST:
+        _RESULTS, _FAST = _measure(fast), fast
+    return _RESULTS
+
+
+def run(fast: bool = False):
+    for r in _results(fast):
+        yield (f"resume/{r['model']}/segmented_vs_single_scan,"
+               f"{r['us_per_draw_segmented']:.1f},"
+               f"overhead={r['overhead'] * 100:+.1f}%;"
+               f"legacy_us={r['us_per_draw_legacy']:.1f};"
+               f"seg={r['checkpoint_every']}")
+
+
+def report(fast: bool = False) -> Dict:
+    from benchmarks.bench_io import entry, make_report
+
+    entries = [
+        entry(f"resume/{r['model']}/segmented",
+              r["us_per_draw_segmented"],
+              us_per_draw_legacy=r["us_per_draw_legacy"],
+              overhead_ratio=r["overhead"],
+              legacy_s=r["legacy_s"], segmented_s=r["segmented_s"],
+              num_warmup=r["num_warmup"], num_samples=r["num_samples"],
+              num_chains=r["num_chains"],
+              checkpoint_every=r["checkpoint_every"],
+              checkpointing="disabled", health_ok=r["health_ok"])
+        for r in _results(fast)
+    ]
+    return make_report("resume", entries, seed=SEED, warmup=WARMUP,
+                       repeats=REPEATS)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true")
+    p.add_argument("--json", default=None, metavar="PATH")
+    args = p.parse_args(argv)
+    for line in run(fast=args.fast):
+        print(line, flush=True)
+    if args.json:
+        from benchmarks.bench_io import write_report
+        write_report(report(fast=args.fast), args.json)
+        print(f"wrote {args.json}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

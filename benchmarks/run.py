@@ -9,6 +9,8 @@
   multichain      — the vmapped ``run_chains`` driver: N chains of static
                     HMC as one jit(vmap(...)) program (enabled by
                     ``--chains N``; also runnable via --only multichain)
+  resume          — segmented (checkpointable) driver vs the single-scan
+                    driver: end-to-end overhead per run_chains call
 
 ``python -m benchmarks.run [--fast] [--only SECTION] [--chains N]
 [--json-dir DIR]`` (--fast cuts table1 to 200 iterations for quick
@@ -50,7 +52,7 @@ def main(argv=None) -> int:
     p.add_argument("--fast", action="store_true")
     p.add_argument("--only", default=None,
                    choices=("table1", "typed_ablation", "kernels",
-                            "leapfrog", "roofline", "multichain"))
+                            "leapfrog", "roofline", "multichain", "resume"))
     p.add_argument("--json-dir", default=None, metavar="DIR",
                    help="also write BENCH_*.json reports into DIR")
     p.add_argument("--chains", type=int, default=None, metavar="N",
@@ -71,6 +73,10 @@ def main(argv=None) -> int:
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         sections.append(("roofline", roofline.run))
+    if args.only in (None, "resume"):
+        from benchmarks import resume_bench
+        sections.append(
+            ("resume", lambda: resume_bench.run(fast=args.fast)))
     if args.only == "multichain" or args.chains is not None:
         n = args.chains if args.chains is not None else 4
         sections.append(
@@ -103,6 +109,11 @@ def main(argv=None) -> int:
         if args.only in (None, "roofline"):
             from benchmarks import roofline
             reporters.append(("BENCH_roofline.json", roofline.report))
+        if args.only in (None, "resume"):
+            from benchmarks import resume_bench
+            reporters.append(
+                ("BENCH_resume.json",
+                 lambda: resume_bench.report(fast=args.fast)))
         for fname, reporter in reporters:
             path = os.path.join(args.json_dir, fname)
             try:

@@ -1,0 +1,65 @@
+"""Fault-tolerant MCMC: checkpointed segments, preemption, resume.
+
+Runs the same posterior three ways and checks they agree draw-for-draw:
+
+1. an uninterrupted segmented run with checkpoints,
+2. the same run "preempted" partway (scripted, deterministic) — final
+   synchronous checkpoint, clean return of the partial chain,
+3. the same call again, which resumes from the committed checkpoint and
+   finishes bit-exactly.
+
+Usage:  PYTHONPATH=src python examples/resumable_chains.py
+"""
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import model, observe, sample
+from repro.dists import HalfNormal, Normal
+from repro.infer import HMC, run_chains
+from repro.runtime.faultinject import ScriptedPreemption
+
+
+def main():
+    rng = np.random.default_rng(0)
+    y = rng.normal(2.0, 1.0, size=200).astype(np.float32)
+
+    @model
+    def g(y):
+        mu = sample("mu", Normal(0.0, 10.0))
+        s = sample("s", HalfNormal(2.0))
+        observe("y", Normal(mu, s), y)
+
+    m = g(jnp.asarray(y))
+    kern = HMC(step_size=0.05, n_leapfrog=4, adapt_step_size=True)
+    key = jax.random.PRNGKey(0)
+    kw = dict(num_samples=100, num_warmup=50, num_chains=4,
+              checkpoint_every=30)
+
+    d0 = tempfile.mkdtemp()
+    ref = run_chains(key, m, kern, checkpoint_dir=d0, **kw)
+    print("--- uninterrupted segmented run ---")
+    print(ref.summary())
+
+    d1 = tempfile.mkdtemp()
+    part = run_chains(key, m, kern, checkpoint_dir=d1,
+                      preemption=ScriptedPreemption(after_polls=2), **kw)
+    print("\n--- preempted partway ---")
+    print(part.health.report())
+
+    resumed = run_chains(key, m, kern, checkpoint_dir=d1, **kw)
+    print("\n--- resumed to completion ---")
+    print(resumed.health.report())
+
+    np.testing.assert_array_equal(np.asarray(ref["mu"]),
+                                  np.asarray(resumed["mu"]))
+    print("\ninterrupted+resumed == uninterrupted: bit-exact OK")
+    shutil.rmtree(d0)
+    shutil.rmtree(d1)
+
+
+if __name__ == "__main__":
+    main()

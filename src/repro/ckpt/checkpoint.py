@@ -31,7 +31,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+__all__ = ["save", "restore", "latest_step", "read_meta", "AsyncCheckpointer"]
 
 _MARKER = "COMMITTED"
 _LEAVES_PER_SHARD = 64
@@ -46,8 +46,22 @@ def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
-def save(directory: str, step: int, tree, keep: Optional[int] = None) -> str:
-    """Write ``tree`` at ``step``; returns the committed directory."""
+def save(directory: str, step: int, tree, keep: Optional[int] = None,
+         meta: Optional[Dict[str, Any]] = None,
+         hooks: Optional[Dict[str, Any]] = None) -> str:
+    """Write ``tree`` at ``step``; returns the committed directory.
+
+    ``meta`` (JSON-serialisable dict) is stored in the manifest and read
+    back with :func:`read_meta` — callers use it to refuse resuming from
+    a checkpoint written by a differently-configured run.
+
+    ``hooks`` is a fault-injection seam (``runtime.faultinject``): the
+    ``"before_rename"`` / ``"before_commit"`` callables run just before
+    the atomic rename and just before the COMMITTED marker. A hook that
+    raises simulates a writer killed at that instant, leaving the
+    on-disk state a crash would leave.
+    """
+    hooks = hooks or {}
     os.makedirs(directory, exist_ok=True)
     final = _step_dir(directory, step)
     tmp = final + ".tmp"
@@ -57,6 +71,8 @@ def save(directory: str, step: int, tree, keep: Optional[int] = None) -> str:
 
     leaves = _flatten_with_paths(tree)
     manifest = {"step": step, "leaves": []}
+    if meta is not None:
+        manifest["meta"] = meta
     for si in range(0, len(leaves), _LEAVES_PER_SHARD):
         chunk = leaves[si:si + _LEAVES_PER_SHARD]
         fname = f"shard_{si // _LEAVES_PER_SHARD:05d}.npz"
@@ -75,9 +91,13 @@ def save(directory: str, step: int, tree, keep: Optional[int] = None) -> str:
         f.flush()
         os.fsync(f.fileno())
 
+    if "before_rename" in hooks:
+        hooks["before_rename"](tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    if "before_commit" in hooks:
+        hooks["before_commit"](final)
     # commit marker LAST: restore ignores uncommitted step dirs
     with open(os.path.join(final, _MARKER), "w") as f:
         f.flush()
@@ -103,6 +123,19 @@ def committed_steps(directory: str) -> List[int]:
 def latest_step(directory: str) -> Optional[int]:
     steps = committed_steps(directory)
     return steps[-1] if steps else None
+
+
+def read_meta(directory: str, step: Optional[int] = None) -> Dict[str, Any]:
+    """Return the ``meta`` dict stored with a committed step ({} if none)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = _step_dir(directory, step)
+    if not os.path.exists(os.path.join(d, _MARKER)):
+        raise FileNotFoundError(f"checkpoint step {step} is not committed")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f).get("meta", {})
 
 
 def restore(directory: str, step: Optional[int] = None,
@@ -154,7 +187,8 @@ class AsyncCheckpointer:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def save(self, step: int, tree) -> None:
+    def save(self, step: int, tree,
+             meta: Optional[Dict[str, Any]] = None) -> None:
         self.wait()
         # device_get synchronously (consistent snapshot), write in thread
         host_tree = jax.tree_util.tree_map(
@@ -162,7 +196,8 @@ class AsyncCheckpointer:
 
         def _write():
             try:
-                save(self.directory, step, host_tree, keep=self.keep)
+                save(self.directory, step, host_tree, keep=self.keep,
+                     meta=meta)
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 

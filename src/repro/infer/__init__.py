@@ -9,6 +9,7 @@ from repro.infer.advi import ADVI, ADVIResult
 from repro.infer.chains import (Chain, TransitionKernel,
                                 effective_sample_size, package_draws,
                                 run_chains, split_rhat)
+from repro.infer.driver import ChainHealth, run_segmented
 from repro.infer.hmc import HMC, DualAveraging
 from repro.infer.map_estimate import MAP
 from repro.infer.mh import RWMH
@@ -17,6 +18,7 @@ from repro.infer.sgld import SGLD, make_sgld_step
 
 __all__ = [
     "HMC", "NUTS", "RWMH", "SGLD", "make_sgld_step", "ADVI", "ADVIResult",
-    "MAP", "Chain", "TransitionKernel", "effective_sample_size",
-    "package_draws", "run_chains", "split_rhat", "DualAveraging",
+    "MAP", "Chain", "ChainHealth", "TransitionKernel",
+    "effective_sample_size", "package_draws", "run_chains", "run_segmented",
+    "split_rhat", "DualAveraging",
 ]

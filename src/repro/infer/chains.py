@@ -15,6 +15,7 @@ Three layers:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import numpy as np
@@ -23,15 +24,29 @@ __all__ = ["Chain", "TransitionKernel", "effective_sample_size",
            "package_draws", "run_chains", "split_rhat"]
 
 
+def _fmt(v, width: int, prec: int) -> str:
+    """Fixed-width float cell; non-finite renders as an explicit marker
+    (``n/a``) instead of a bare ``nan`` so degenerate diagnostics are
+    visible at a glance."""
+    v = float(v)
+    if np.isnan(v):
+        return f"{'n/a':>{width}}"
+    return f"{v:>{width}.{prec}f}"
+
+
 class Chain:
     """Posterior draws: dict name -> (num_chains, num_samples, ...) arrays.
 
     Single-chain results are stored with a leading chain axis of 1.
+    ``health`` (optional) is the :class:`~repro.infer.driver.ChainHealth`
+    report the driver produced; ``summary()`` appends it when present.
     """
 
-    def __init__(self, draws: Dict[str, Any], stats: Optional[Dict[str, Any]] = None):
+    def __init__(self, draws: Dict[str, Any],
+                 stats: Optional[Dict[str, Any]] = None, health=None):
         self.draws = {k: np.asarray(v) for k, v in draws.items()}
         self.stats = {k: np.asarray(v) for k, v in (stats or {}).items()}
+        self.health = health
         first = next(iter(self.draws.values()))
         self.num_chains, self.num_samples = first.shape[0], first.shape[1]
 
@@ -56,16 +71,25 @@ class Chain:
         return {n: self.flat(n) for n in self.names()}
 
     def summary(self) -> str:
-        lines = [f"{'param':<18}{'mean':>12}{'std':>12}{'ess':>10}{'rhat':>8}"]
+        has_div = "diverging" in self.stats
+        n_div = int(np.sum(self.stats["diverging"])) if has_div else 0
+        header = f"{'param':<18}{'mean':>12}{'std':>12}{'ess':>10}{'rhat':>8}"
+        if has_div:
+            header += f"{'div':>6}"
+        lines = [header]
         for n in self.names():
             v = self.draws[n]
             scalar = v.reshape(v.shape[0], v.shape[1], -1)[..., 0]
             ess = effective_sample_size(scalar)
             rhat = split_rhat(scalar)
-            lines.append(
-                f"{n:<18}{self.mean(n).ravel()[0]:>12.4f}"
-                f"{self.std(n).ravel()[0]:>12.4f}{ess:>10.1f}{rhat:>8.3f}"
-            )
+            row = (f"{n:<18}{_fmt(self.mean(n).ravel()[0], 12, 4)}"
+                   f"{_fmt(self.std(n).ravel()[0], 12, 4)}"
+                   f"{_fmt(ess, 10, 1)}{_fmt(rhat, 8, 3)}")
+            if has_div:
+                row += f"{n_div:>6d}"
+            lines.append(row)
+        if self.health is not None:
+            lines += ["", self.health.report()]
         return "\n".join(lines)
 
     def __repr__(self):
@@ -83,14 +107,30 @@ def _autocov(x: np.ndarray) -> np.ndarray:
 
 
 def effective_sample_size(x: np.ndarray) -> float:
-    """Geyer initial-monotone ESS for (chains, samples) scalar draws."""
+    """Geyer initial-monotone ESS for (chains, samples) scalar draws.
+
+    Degenerate inputs — fewer than 4 draws per chain, or zero variance
+    (a constant / fully stuck chain) — have no defined ESS; those cases
+    return ``nan`` WITH an explicit ``RuntimeWarning`` naming the cause
+    rather than silently propagating ``nan`` arithmetic."""
     x = np.atleast_2d(np.asarray(x, dtype=np.float64))
     m, n = x.shape
+    if n < 4:
+        warnings.warn(
+            f"effective_sample_size is undefined for {n} draws per chain "
+            "(need >= 4); returning nan", RuntimeWarning, stacklevel=2)
+        return float("nan")
     acov = _autocov(x)
     mean_var = acov[:, 0].mean() * n / (n - 1.0)
     var_plus = mean_var * (n - 1.0) / n
     if m > 1:
         var_plus += x.mean(axis=1).var(ddof=1)
+    if not np.isfinite(var_plus) or var_plus <= 1e-300:
+        warnings.warn(
+            "effective_sample_size is undefined for zero-variance or "
+            "non-finite draws (constant / stuck chain?); returning nan",
+            RuntimeWarning, stacklevel=2)
+        return float("nan")
     rho = 1.0 - (mean_var - acov.mean(axis=0)) / var_plus
     # Geyer initial-positive-monotone sequence over lag pairs
     prev_pair = np.inf
@@ -108,11 +148,20 @@ def effective_sample_size(x: np.ndarray) -> float:
 
 
 def split_rhat(x: np.ndarray) -> float:
-    """Split-chain potential scale reduction factor."""
+    """Split-chain potential scale reduction factor.
+
+    Degenerate inputs warn explicitly instead of silently returning a
+    bare ``nan``: fewer than 4 draws per chain -> ``nan``; zero variance
+    everywhere (all chains constant at one point) -> ``nan``; zero
+    within-chain variance but distinct chain means (chains stuck at
+    DIFFERENT points — the worst possible mixing) -> ``inf``."""
     x = np.atleast_2d(np.asarray(x, dtype=np.float64))
     m, n = x.shape
     half = n // 2
     if half < 2:
+        warnings.warn(
+            f"split_rhat is undefined for {n} draws per chain (need >= 4 "
+            "to split); returning nan", RuntimeWarning, stacklevel=2)
         return float("nan")
     halves = np.concatenate([x[:, :half], x[:, half:2 * half]], axis=0)
     m2, n2 = halves.shape
@@ -120,8 +169,20 @@ def split_rhat(x: np.ndarray) -> float:
     chain_vars = halves.var(axis=1, ddof=1)
     w = chain_vars.mean()
     b = n2 * chain_means.var(ddof=1)
+    if not np.isfinite(w) or w <= 1e-300:
+        if not np.isfinite(b) or b <= 1e-300:
+            warnings.warn(
+                "split_rhat is undefined for zero-variance draws (all "
+                "chains constant); returning nan",
+                RuntimeWarning, stacklevel=2)
+            return float("nan")
+        warnings.warn(
+            "split_rhat: zero within-chain variance with distinct chain "
+            "means (chains stuck at different points); returning inf",
+            RuntimeWarning, stacklevel=2)
+        return float("inf")
     var_plus = (n2 - 1.0) / n2 * w + b / n2
-    return float(np.sqrt(var_plus / max(w, 1e-300)))
+    return float(np.sqrt(var_plus / w))
 
 
 # ---------------------------------------------------------------------------
@@ -187,9 +248,52 @@ def package_draws(tvi_linked, qs, stats: Optional[Dict[str, Any]] = None) -> Cha
                  stats={k: np.asarray(v) for k, v in (stats or {}).items()})
 
 
+def setup_chain_driver(key, model, kernel, *, num_chains: int,
+                       init_varinfo=None, init_jitter: float = 1.0,
+                       backend: str = "fused"):
+    """Shared preamble of the single-scan and segmented drivers.
+
+    Builds the linked trace, the fused log-density, the sampler's
+    :class:`TransitionKernel` (with a compiled PotentialSpec when the
+    sampler wants one), jittered per-chain initial positions, and the
+    per-chain PRNG keys. Key derivation here is THE contract both
+    drivers share — it is what makes a segmented run draw-for-draw
+    identical to a single-scan run under the same master key.
+
+    Returns ``(tvi_linked, kern, dim, q0s, chain_keys)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    k_init, k_run = jax.random.split(key)
+    tvi = (init_varinfo if init_varinfo is not None
+           else model.typed_varinfo(k_init)).link()
+    logdensity = model.make_logdensity_fn(tvi, backend=backend)
+    dim = int(tvi.num_flat)
+    spec = None
+    if getattr(kernel, "uses_potential_spec", False):
+        # lazy import: chains.py is imported by hmc.py/nuts.py, which in
+        # turn are what core.potential's validation machinery sits beside
+        from repro.core.potential import build_potential_spec
+        spec = build_potential_spec(model, tvi, backend=backend)
+    kern = (kernel.make_kernel(logdensity, dim, spec=spec)
+            if spec is not None else kernel.make_kernel(logdensity, dim))
+
+    q0 = tvi.flat()
+    q0s = jnp.broadcast_to(q0, (num_chains, dim))
+    if init_jitter:
+        q0s = q0s + jax.random.uniform(
+            jax.random.fold_in(k_init, 7), (num_chains, dim),
+            minval=-init_jitter, maxval=init_jitter)
+    chain_keys = jax.random.split(k_run, num_chains)
+    return tvi, kern, dim, q0s, chain_keys
+
+
 def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
                num_chains: int = 4, init_varinfo=None, init_jitter: float = 1.0,
-               backend: str = "fused") -> Chain:
+               backend: str = "fused", checkpoint_dir: Optional[str] = None,
+               checkpoint_every: Optional[int] = None, checkpoint_keep: int = 3,
+               preemption=None, fallback: bool = True) -> Chain:
     """Run ``num_chains`` MCMC chains as ONE vmap-compiled program.
 
     The model's log-density is built once from the typed trace (fused
@@ -220,36 +324,52 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         meaningful). ``0.0`` starts every chain at the same point.
     backend : {"fused", "reference"}
         Log-density backend (see ``Model.make_logdensity_fn``).
+    checkpoint_dir : str, optional
+        Directory for atomic keep-N ``RunState`` snapshots. Setting it
+        (or ``checkpoint_every`` / ``preemption``) switches to the
+        SEGMENTED driver (``repro.infer.driver``): the loop runs in
+        ``checkpoint_every``-sized compiled segments, snapshots between
+        them, and RESUMES bit-exactly from the latest committed snapshot
+        when one exists (same master key required).
+    checkpoint_every : int, optional
+        Segment length in transitions (warmup + sampling). Defaults to
+        a tenth of the total when only ``checkpoint_dir`` is given.
+    checkpoint_keep : int
+        Keep-N retention for committed snapshots.
+    preemption : PreemptionHandler, optional
+        Polled between segments; on preemption the driver writes a final
+        synchronous checkpoint and returns the partial chain cleanly.
+        When ``checkpoint_dir`` is set and this is ``None``, the driver
+        installs its own SIGTERM/SIGINT handler for the duration.
+    fallback : bool
+        Segmented driver only: retry a segment whose state went
+        non-finite on the reference backend (fused -> reference graceful
+        degradation), recording the event in ``Chain.health``.
 
     Returns
     -------
     Chain
         Draws of shape ``(num_chains, num_samples) + site.shape`` per site;
-        ``stats`` holds ``logp`` and the kernel's extras (accept_prob, ...).
+        ``stats`` holds ``logp`` and the kernel's extras (accept_prob,
+        diverging, ...); ``health`` carries the ``ChainHealth`` report.
     """
     import jax
     import jax.numpy as jnp
 
-    k_init, k_run = jax.random.split(key)
-    tvi = (init_varinfo if init_varinfo is not None
-           else model.typed_varinfo(k_init)).link()
-    logdensity = model.make_logdensity_fn(tvi, backend=backend)
-    dim = int(tvi.num_flat)
-    spec = None
-    if getattr(kernel, "uses_potential_spec", False):
-        # lazy import: chains.py is imported by hmc.py/nuts.py, which in
-        # turn are what core.potential's validation machinery sits beside
-        from repro.core.potential import build_potential_spec
-        spec = build_potential_spec(model, tvi, backend=backend)
-    kern = (kernel.make_kernel(logdensity, dim, spec=spec)
-            if spec is not None else kernel.make_kernel(logdensity, dim))
+    if (checkpoint_dir is not None or checkpoint_every is not None
+            or preemption is not None):
+        from repro.infer.driver import run_segmented
+        return run_segmented(
+            key, model, kernel, num_samples, num_warmup=num_warmup,
+            num_chains=num_chains, init_varinfo=init_varinfo,
+            init_jitter=init_jitter, backend=backend,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, preemption=preemption,
+            fallback=fallback)
 
-    q0 = tvi.flat()
-    q0s = jnp.broadcast_to(q0, (num_chains, dim))
-    if init_jitter:
-        q0s = q0s + jax.random.uniform(
-            jax.random.fold_in(k_init, 7), (num_chains, dim),
-            minval=-init_jitter, maxval=init_jitter)
+    tvi, kern, dim, q0s, chain_keys = setup_chain_driver(
+        key, model, kernel, num_chains=num_chains, init_varinfo=init_varinfo,
+        init_jitter=init_jitter, backend=backend)
 
     def one_chain(ckey, q0):
         state = kern.init(q0)
@@ -270,7 +390,11 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         _, outs = jax.lax.scan(kern.step, state, skeys)
         return outs
 
-    chain_keys = jax.random.split(k_run, num_chains)
     outs = jax.jit(jax.vmap(one_chain))(chain_keys, q0s)
     qs = outs.pop("q")
-    return package_draws(tvi, qs, stats=outs)
+    chain = package_draws(tvi, qs, stats=outs)
+    from repro.infer.driver import health_from_stats
+    chain.health = health_from_stats(chain.stats, num_warmup=num_warmup,
+                                     num_samples=num_samples,
+                                     num_chains=num_chains)
+    return chain

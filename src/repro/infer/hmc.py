@@ -83,9 +83,13 @@ def hmc_transition(ld_and_grad: Callable, q, logp, grad, step_size,
                    leapfrog_fn: Optional[Callable] = None):
     """One Metropolis-corrected HMC transition.
 
-    Returns ``(q, logp, grad, accept_prob, accepted)``; shared by
-    ``HMC.run`` and the ``TransitionKernel`` built by ``HMC.make_kernel``
-    so both paths run the exact same arithmetic.
+    Returns ``(q, logp, grad, accept_prob, accepted, diverging)``; shared
+    by ``HMC.run`` and the ``TransitionKernel`` built by
+    ``HMC.make_kernel`` so both paths run the exact same arithmetic.
+    ``diverging`` is the Stan criterion: the proposed trajectory's energy
+    error exceeds 1000 (or is NaN) — the transition is still valid (the
+    proposal is simply rejected) but a high divergence count signals the
+    integrator is unstable at the current step size.
 
     ``inv_mass`` (diagonal, flat vector or None) shapes BOTH the momentum
     draw (``p ~ N(0, M)``) and the kinetic energy — the single source of
@@ -113,13 +117,15 @@ def hmc_transition(ld_and_grad: Callable, q, logp, grad, step_size,
 
     h0 = -logp + kinetic(p0)
     h1 = -logp_new + kinetic(p_new)
-    log_accept = jnp.minimum(0.0, h0 - h1)
+    delta = h0 - h1
+    diverging = jnp.isnan(delta) | (-delta > 1000.0)
+    log_accept = jnp.minimum(0.0, delta)
     log_accept = jnp.where(jnp.isnan(log_accept), -jnp.inf, log_accept)
     accept = jnp.log(jax.random.uniform(k_acc, ())) < log_accept
     q = jnp.where(accept, q_new, q)
     logp = jnp.where(accept, logp_new, logp)
     grad = jnp.where(accept, grad_new, grad)
-    return q, logp, grad, jnp.exp(log_accept), accept
+    return q, logp, grad, jnp.exp(log_accept), accept, diverging
 
 
 def make_chain_fn(logdensity: Callable, num_samples: int, step_size: float,
@@ -232,20 +238,20 @@ class HMC:
 
             def body(s, key):
                 s, o = kern.step(s, key)
-                out = ((o["q"], o["logp"], o["accept_prob"]) if collect
-                       else (o["logp"], o["accept_prob"]))
+                out = ((o["q"], o["logp"], o["accept_prob"], o["diverging"])
+                       if collect else (o["logp"], o["accept_prob"]))
                 return s, out
 
             keys = jax.random.split(jax.random.fold_in(key, 2), num_samples)
             state, outs = jax.lax.scan(body, state, keys)
             if collect:
-                return outs  # (qs, logps, accs)
+                return outs  # (qs, logps, accs, divs)
             return (state[0], *outs)
 
         if num_chains == 1:
             chain_fn = jax.jit(lambda k: one_chain(k, tvi.flat()))
             outs = chain_fn(k_run)
-            qs, logps, accs = (o[None] for o in outs)  # add chain axis
+            qs, logps, accs, divs = (o[None] for o in outs)  # add chain axis
         else:
             keys = jax.random.split(k_run, num_chains)
             # overdispersed inits: Uniform(-1, 1) jitter around the
@@ -257,14 +263,17 @@ class HMC:
                 jax.random.fold_in(k_init, 7), (num_chains, n_flat),
                 minval=-1.0, maxval=1.0)
             chain_fn = jax.jit(jax.vmap(one_chain))
-            qs, logps, accs = chain_fn(keys, q0s)
+            qs, logps, accs, divs = chain_fn(keys, q0s)
 
-        return self._package(m, tvi, qs, logps, accs)
+        return self._package(m, tvi, qs, logps, accs, divs)
 
-    def _package(self, m: Model, tvi_linked: TypedVarInfo, qs, logps, accs) -> Chain:
+    def _package(self, m: Model, tvi_linked: TypedVarInfo, qs, logps, accs,
+                 divs=None) -> Chain:
         """Map flat unconstrained draws back to constrained named arrays."""
-        return package_draws(tvi_linked, qs,
-                             stats={"logp": logps, "accept_prob": accs})
+        stats = {"logp": logps, "accept_prob": accs}
+        if divs is not None:
+            stats["diverging"] = divs
+        return package_draws(tvi_linked, qs, stats=stats)
 
     # -- TransitionKernel protocol (run_chains driver) -------------------------
     def make_kernel(self, logdensity: Callable, dim: int,
@@ -326,7 +335,7 @@ class HMC:
         def warm(state, t, key):
             q, logp, grad, da_state, eps = state
             cur = jnp.exp(da_state[0]) if self.adapt_step_size else eps
-            q, logp, grad, acc, _ = hmc_transition(
+            q, logp, grad, acc, _, _ = hmc_transition(
                 ld_and_grad, q, logp, grad, cur, key, self.n_leapfrog,
                 inv_mass=inv_mass, leapfrog_fn=leapfrog_fn)
             if self.adapt_step_size:
@@ -341,10 +350,11 @@ class HMC:
 
         def step(state, key):
             q, logp, grad, da_state, eps = state
-            q, logp, grad, acc, _ = hmc_transition(
+            q, logp, grad, acc, _, div = hmc_transition(
                 ld_and_grad, q, logp, grad, eps, key, self.n_leapfrog,
                 inv_mass=inv_mass, leapfrog_fn=leapfrog_fn)
-            out = {"q": q, "logp": logp, "accept_prob": acc}
+            out = {"q": q, "logp": logp, "accept_prob": acc,
+                   "diverging": div}
             return (q, logp, grad, da_state, eps), out
 
         return TransitionKernel(init, warm, finalize, step)

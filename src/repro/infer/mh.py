@@ -36,7 +36,10 @@ class RWMH:
         """Build the pure RWMH :class:`TransitionKernel` for ``run_chains``.
 
         State is ``(q, logp)``; warmup transitions are plain MH steps (no
-        adaptation); ``step`` emits ``{"q", "logp", "accept_prob"}``.
+        adaptation); ``step`` emits ``{"q", "logp", "accept_prob",
+        "diverging"}`` (``diverging`` = the proposal's log-density came
+        back NaN — for a gradient-free kernel that only happens when the
+        density itself is broken, so it is surfaced as a health signal).
         """
 
         def init(q0):
@@ -47,11 +50,12 @@ class RWMH:
             k_prop, k_acc = jax.random.split(key)
             q_new = q + self.proposal_scale * jax.random.normal(k_prop, (dim,))
             logp_new = logdensity(q_new)
-            log_acc = jnp.where(jnp.isnan(logp_new), -jnp.inf, logp_new - logp)
+            diverging = jnp.isnan(logp_new)
+            log_acc = jnp.where(diverging, -jnp.inf, logp_new - logp)
             accept = jnp.log(jax.random.uniform(k_acc, ())) < log_acc
             q = jnp.where(accept, q_new, q)
             logp = jnp.where(accept, logp_new, logp)
-            return (q, logp), accept
+            return (q, logp), (accept, diverging)
 
         def warm(state, t, key):
             del t
@@ -59,10 +63,11 @@ class RWMH:
             return state
 
         def step(state, key):
-            state, accept = transition(state, key)
+            state, (accept, diverging) = transition(state, key)
             q, logp = state
             out = {"q": q, "logp": logp,
-                   "accept_prob": accept.astype(jnp.float32)}
+                   "accept_prob": accept.astype(jnp.float32),
+                   "diverging": diverging}
             return state, out
 
         return TransitionKernel(init, warm, lambda s: s, step)
@@ -82,11 +87,12 @@ class RWMH:
             k_prop, k_acc = jax.random.split(key)
             q_new = q + self.proposal_scale * jax.random.normal(k_prop, (dim,))
             logp_new = logdensity(q_new)
-            log_acc = jnp.where(jnp.isnan(logp_new), -jnp.inf, logp_new - logp)
+            diverging = jnp.isnan(logp_new)
+            log_acc = jnp.where(diverging, -jnp.inf, logp_new - logp)
             accept = jnp.log(jax.random.uniform(k_acc, ())) < log_acc
             q = jnp.where(accept, q_new, q)
             logp = jnp.where(accept, logp_new, logp)
-            return (q, logp), (q, logp, accept)
+            return (q, logp), (q, logp, accept, diverging)
 
         def one_chain(key, q0):
             logp0 = logdensity(q0)
@@ -99,14 +105,14 @@ class RWMH:
             return outs
 
         if num_chains == 1:
-            qs, logps, accs = jax.jit(lambda k: one_chain(k, tvi.flat()))(k_run)
-            qs, logps, accs = qs[None], logps[None], accs[None]
+            outs = jax.jit(lambda k: one_chain(k, tvi.flat()))(k_run)
+            qs, logps, accs, divs = (o[None] for o in outs)
         else:
             keys = jax.random.split(k_run, num_chains)
             q0s = jnp.broadcast_to(tvi.flat(), (num_chains, dim))
-            qs, logps, accs = jax.jit(jax.vmap(one_chain))(keys, q0s)
+            qs, logps, accs, divs = jax.jit(jax.vmap(one_chain))(keys, q0s)
         return HMC()._package(m, tvi, qs, logps,
-                              np.asarray(accs, dtype=np.float32))
+                              np.asarray(accs, dtype=np.float32), divs)
 
     def run_untyped(self, key, m: Model, num_samples: int,
                     init_varinfo: Optional[TypedVarInfo] = None) -> Chain:

@@ -240,8 +240,10 @@ class NUTS:
         """Build the pure NUTS :class:`TransitionKernel` for ``run_chains``.
 
         State is ``(q, logp, grad, da_state, eps)``; ``step`` emits
-        ``{"q", "logp", "accept_prob", "tree_depth"}`` per draw. Warmup
-        runs dual-averaging on the mean subtree acceptance statistic.
+        ``{"q", "logp", "accept_prob", "tree_depth", "diverging"}`` per
+        draw (``diverging`` = the doubling tree hit an energy error >
+        1000 or NaN and was truncated). Warmup runs dual-averaging on
+        the mean subtree acceptance statistic.
         ``spec`` (an optional compiled PotentialSpec) swaps the tree-leaf
         gradient for the fused analytic evaluator.
         """
@@ -270,9 +272,10 @@ class NUTS:
 
         def step(state, key):
             q, logp, grad, da_state, eps = state
-            q, logp, grad, acc, depth, _ = nuts_step(q, logp, grad, eps, key)
+            q, logp, grad, acc, depth, div = nuts_step(q, logp, grad, eps,
+                                                       key)
             out = {"q": q, "logp": logp, "accept_prob": acc,
-                   "tree_depth": depth}
+                   "tree_depth": depth, "diverging": div}
             return (q, logp, grad, da_state, eps), out
 
         return TransitionKernel(init, warm, finalize, step)
@@ -320,22 +323,22 @@ class NUTS:
             def body(carry, k):
                 q, logp, grad = carry
                 q, logp, grad, acc, depth, div = nuts_step(q, logp, grad, eps, k)
-                return (q, logp, grad), (q, logp, acc, depth)
+                return (q, logp, grad), (q, logp, acc, depth, div)
 
             keys = jax.random.split(jax.random.fold_in(key, 2), num_samples)
             _, outs = jax.lax.scan(body, (q0, logp0, grad0), keys)
             return outs
 
         if num_chains == 1:
-            qs, logps, accs, depths = jax.jit(
-                lambda k: one_chain(k, tvi.flat()))(k_run)
-            qs, logps, accs, depths = (o[None] for o in (qs, logps, accs, depths))
+            outs = jax.jit(lambda k: one_chain(k, tvi.flat()))(k_run)
+            qs, logps, accs, depths, divs = (o[None] for o in outs)
         else:
             keys = jax.random.split(k_run, num_chains)
             q0s = jnp.broadcast_to(tvi.flat(), (num_chains, dim))
-            qs, logps, accs, depths = jax.jit(jax.vmap(one_chain))(keys, q0s)
+            qs, logps, accs, depths, divs = jax.jit(jax.vmap(one_chain))(
+                keys, q0s)
 
         packer = HMC()
-        chain = packer._package(m, tvi, qs, logps, accs)
+        chain = packer._package(m, tvi, qs, logps, accs, divs)
         chain.stats["tree_depth"] = np.asarray(depths)
         return chain

@@ -129,12 +129,16 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--log-every", type=int, default=10)
     args = p.parse_args(argv)
-    _, history = train(args.arch, smoke=args.smoke, steps=args.steps,
-                       batch=args.batch, seq=args.seq, mode=args.mode,
-                       lr=args.lr, microbatch=args.microbatch,
-                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                       seed=args.seed, log_every=args.log_every,
-                       preempt=PreemptionHandler())
+    # context manager: SIGTERM/SIGINT handlers are restored on exit even
+    # if train() raises, so embedding callers keep their own handlers
+    with PreemptionHandler() as preempt:
+        _, history = train(args.arch, smoke=args.smoke, steps=args.steps,
+                           batch=args.batch, seq=args.seq, mode=args.mode,
+                           lr=args.lr, microbatch=args.microbatch,
+                           ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every,
+                           seed=args.seed, log_every=args.log_every,
+                           preempt=preempt)
     if len(history) >= 2 and history[-1][1] >= history[0][1]:
         print("[train] WARNING: nll did not improve", flush=True)
     return 0

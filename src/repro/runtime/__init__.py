@@ -1,4 +1,7 @@
 from repro.runtime.elastic import plan_elastic_mesh  # noqa: F401
+from repro.runtime.faultinject import (NaNInjector,  # noqa: F401
+                                       ScriptedPreemption, SimulatedKill,
+                                       torn_save)
 from repro.runtime.heartbeat import HeartbeatMonitor  # noqa: F401
 from repro.runtime.preemption import PreemptionHandler  # noqa: F401
 from repro.runtime.straggler import StragglerDetector  # noqa: F401

@@ -46,3 +46,12 @@ class PreemptionHandler:
             except (ValueError, OSError):
                 pass
         self._prev.clear()
+
+    # context manager: restores the previous signal handlers on exit, so
+    # a scoped `with PreemptionHandler() as ph:` cannot leak handlers
+    # into later code (e.g. pytest's own SIGINT handling)
+    def __enter__(self) -> "PreemptionHandler":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.uninstall()

@@ -1,0 +1,310 @@
+"""Segmented driver: checkpointed resume, preemption, fault injection,
+chain-health guard rails, and the degenerate-diagnostic warnings.
+
+Bit-exactness contract tested here: an INTERRUPTED segmented run, resumed
+from its latest committed checkpoint, reproduces the UNINTERRUPTED
+segmented run draw-for-draw (same master key, same segmentation). The
+segmented and single-scan drivers agree only to compilation-level float
+reassociation (~1 ulp), so cross-driver checks use a tight allclose.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import model, observe, sample
+from repro.ckpt.checkpoint import (committed_steps, latest_step, read_meta,
+                                   restore, save)
+from repro.dists import HalfNormal, Normal
+from repro.infer import (HMC, NUTS, RWMH, ChainHealth, effective_sample_size,
+                         run_chains, split_rhat)
+from repro.runtime.faultinject import (NaNInjector, ScriptedPreemption,
+                                       SimulatedKill, torn_save)
+from repro.runtime.preemption import PreemptionHandler
+
+
+@pytest.fixture(scope="module")
+def chain_model():
+    np.random.seed(7)
+    y = np.random.normal(2.0, 1.0, size=80).astype(np.float32)
+
+    @model
+    def g(y):
+        mu = sample("mu", Normal(0.0, 10.0))
+        s = sample("s", HalfNormal(2.0))
+        observe("y", Normal(mu, s), y)
+
+    return g(jnp.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# segmented == single-scan (trajectory), resume bit-exactness
+# ---------------------------------------------------------------------------
+def test_segmented_matches_single_scan(chain_model):
+    kern = HMC(step_size=0.05, n_leapfrog=4, adapt_step_size=True)
+    key = jax.random.PRNGKey(0)
+    legacy = run_chains(key, chain_model, kern, num_samples=40,
+                        num_warmup=30, num_chains=3)
+    seg = run_chains(key, chain_model, kern, num_samples=40, num_warmup=30,
+                     num_chains=3, checkpoint_every=13)
+    np.testing.assert_allclose(legacy["mu"], seg["mu"], rtol=3e-6, atol=3e-6)
+    np.testing.assert_allclose(legacy["s"], seg["s"], rtol=3e-6, atol=3e-6)
+    assert seg.health is not None and seg.health.ok
+
+
+@pytest.mark.parametrize("kern", [
+    HMC(step_size=0.05, n_leapfrog=4, adapt_step_size=True),
+    NUTS(step_size=0.1, max_depth=4),
+], ids=["hmc", "nuts"])
+def test_interrupt_resume_bit_exact(chain_model, kern, tmp_path):
+    key = jax.random.PRNGKey(0)
+    common = dict(num_samples=24, num_warmup=12, num_chains=2,
+                  checkpoint_every=9)
+    uninterrupted = run_chains(key, chain_model, kern, **common)
+
+    d = str(tmp_path / "ckpt")
+    partial = run_chains(key, chain_model, kern, checkpoint_dir=d,
+                         preemption=ScriptedPreemption(after_polls=2),
+                         **common)
+    assert partial.health.preempted
+    assert 0 < partial.health.completed < 36
+    # the preemption checkpoint is committed and resumable
+    assert latest_step(d) == partial.health.completed
+
+    resumed = run_chains(key, chain_model, kern, checkpoint_dir=d, **common)
+    assert resumed.health.resumed_from == partial.health.completed
+    np.testing.assert_array_equal(np.asarray(uninterrupted["mu"]),
+                                  np.asarray(resumed["mu"]))
+    np.testing.assert_array_equal(np.asarray(uninterrupted.stats["logp"]),
+                                  np.asarray(resumed.stats["logp"]))
+
+
+def test_rwmh_segmented_and_resume(chain_model, tmp_path):
+    kern = RWMH(proposal_scale=0.3)
+    key = jax.random.PRNGKey(3)
+    common = dict(num_samples=30, num_chains=2, checkpoint_every=10)
+    uninterrupted = run_chains(key, chain_model, kern, **common)
+    d = str(tmp_path / "ckpt")
+    run_chains(key, chain_model, kern, checkpoint_dir=d,
+               preemption=ScriptedPreemption(after_polls=1), **common)
+    resumed = run_chains(key, chain_model, kern, checkpoint_dir=d, **common)
+    np.testing.assert_array_equal(np.asarray(uninterrupted["mu"]),
+                                  np.asarray(resumed["mu"]))
+
+
+def test_completed_run_leaves_final_checkpoint(chain_model, tmp_path):
+    d = str(tmp_path / "ckpt")
+    run_chains(jax.random.PRNGKey(0), chain_model, RWMH(proposal_scale=0.3),
+               num_samples=20, num_warmup=10, num_chains=2,
+               checkpoint_dir=d, checkpoint_every=8)
+    assert latest_step(d) == 30  # warmup + samples
+
+
+def test_meta_mismatch_refuses_resume(chain_model, tmp_path):
+    d = str(tmp_path / "ckpt")
+    kern = RWMH(proposal_scale=0.3)
+    run_chains(jax.random.PRNGKey(0), chain_model, kern, num_samples=20,
+               num_chains=2, checkpoint_dir=d, checkpoint_every=10)
+    with pytest.raises(ValueError, match="different run configuration"):
+        run_chains(jax.random.PRNGKey(1), chain_model, kern, num_samples=20,
+                   num_chains=2, checkpoint_dir=d, checkpoint_every=10)
+    with pytest.raises(ValueError, match="different run configuration"):
+        run_chains(jax.random.PRNGKey(0), chain_model, kern, num_samples=20,
+                   num_chains=3, checkpoint_dir=d, checkpoint_every=10)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+@pytest.mark.faultinject
+def test_nan_injection_falls_back_to_reference(chain_model):
+    inj = NaNInjector(HMC(step_size=0.05, n_leapfrog=3,
+                          adapt_step_size=True),
+                      at_iterations={17})
+    ch = run_chains(jax.random.PRNGKey(0), chain_model, inj, num_samples=30,
+                    num_warmup=10, num_chains=2, checkpoint_every=8)
+    h = ch.health
+    assert h.fallback_segments >= 1
+    assert int(h.nonfinite.sum()) >= 1
+    # the reference rerun repaired the segment: every draw is finite
+    assert np.isfinite(np.asarray(ch["mu"])).all()
+    assert np.isfinite(np.asarray(ch.stats["logp"])).all()
+    assert "fused->reference fallback" in h.report()
+    assert not h.ok
+
+
+@pytest.mark.faultinject
+def test_nan_injection_without_fallback_is_recorded(chain_model):
+    inj = NaNInjector(HMC(step_size=0.05, n_leapfrog=3), at_iterations={17})
+    ch = run_chains(jax.random.PRNGKey(0), chain_model, inj, num_samples=30,
+                    num_warmup=10, num_chains=2, checkpoint_every=8,
+                    fallback=False)
+    assert ch.health.fallback_segments == 0
+    assert int(ch.health.nonfinite.sum()) >= 1
+    assert not ch.health.ok
+
+
+@pytest.mark.faultinject
+def test_scripted_preemption_commits_and_exits_cleanly(chain_model, tmp_path):
+    d = str(tmp_path / "ckpt")
+    ph = ScriptedPreemption(after_polls=1)
+    ch = run_chains(jax.random.PRNGKey(0), chain_model,
+                    RWMH(proposal_scale=0.3), num_samples=40, num_chains=2,
+                    checkpoint_dir=d, checkpoint_every=10, preemption=ph)
+    assert ch.health.preempted
+    assert ch.num_samples == ch.health.completed_samples
+    # final checkpoint is SYNCHRONOUS and committed before return
+    assert latest_step(d) == ch.health.completed
+    assert read_meta(d)["num_samples"] == 40
+    assert "PREEMPTED" in ch.health.report()
+
+
+@pytest.mark.faultinject
+def test_torn_checkpoint_is_invisible(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"a": np.arange(5.0), "b": np.ones((2, 3), np.float32)}
+    save(d, 1, tree)
+    torn_save(d, 2, tree, kill_at="before_commit")   # renamed, no marker
+    torn_save(d, 3, tree, kill_at="before_rename")   # only step_3.tmp
+    assert committed_steps(d) == [1]
+    assert latest_step(d) == 1
+    step, got = restore(d)
+    assert step == 1
+    arrs = sorted(got.values(), key=lambda a: a.size)
+    np.testing.assert_array_equal(arrs[0], tree["a"])
+    np.testing.assert_array_equal(arrs[1], tree["b"])
+    with pytest.raises(FileNotFoundError):
+        restore(d, step=2)
+
+
+@pytest.mark.faultinject
+def test_torn_save_kill_points_validate():
+    with pytest.raises(ValueError):
+        torn_save("/tmp/unused", 0, {"a": np.zeros(1)}, kill_at="nowhere")
+
+
+@pytest.mark.faultinject
+def test_resume_skips_torn_latest(chain_model, tmp_path):
+    """A writer killed mid-save of step N must make resume fall back to
+    the previous committed step and still finish the run correctly."""
+    d = str(tmp_path / "ckpt")
+    kern = RWMH(proposal_scale=0.3)
+    key = jax.random.PRNGKey(5)
+    common = dict(num_samples=30, num_chains=2, checkpoint_every=10)
+    uninterrupted = run_chains(key, chain_model, kern, **common)
+
+    run_chains(key, chain_model, kern, checkpoint_dir=d,
+               preemption=ScriptedPreemption(after_polls=2), **common)
+    good = latest_step(d)
+    # simulate a crash while writing the NEXT snapshot
+    _, tree = restore(d, good, target=None)
+    torn = {k: np.asarray(v) for k, v in tree.items()}
+    torn_save(d, good + 10, torn, kill_at="before_commit")
+    assert latest_step(d) == good
+
+    resumed = run_chains(key, chain_model, kern, checkpoint_dir=d, **common)
+    assert resumed.health.resumed_from == good
+    np.testing.assert_array_equal(np.asarray(uninterrupted["mu"]),
+                                  np.asarray(resumed["mu"]))
+
+
+# ---------------------------------------------------------------------------
+# health / guard rails / divergence stats
+# ---------------------------------------------------------------------------
+def test_divergence_stat_surfaced_and_summarised(chain_model):
+    ch = run_chains(jax.random.PRNGKey(0), chain_model,
+                    HMC(step_size=0.05, n_leapfrog=4, adapt_step_size=True),
+                    num_samples=30, num_warmup=20, num_chains=2)
+    assert "diverging" in ch.stats
+    assert ch.stats["diverging"].shape == (2, 30)
+    s = ch.summary()
+    assert "div" in s.splitlines()[0].split()
+    assert "chain health" in s
+
+
+def test_stuck_chain_guard_rail(chain_model):
+    # no adaptation + a wild init puts one chain in a zero-acceptance
+    # regime; the rails must flag it after `patience` segments
+    ch = run_chains(jax.random.PRNGKey(0), chain_model,
+                    HMC(step_size=0.05, n_leapfrog=3), num_samples=30,
+                    num_warmup=10, num_chains=2, checkpoint_every=8)
+    acc = ch.stats["accept_prob"]
+    if (acc.mean(axis=1) < 1e-3).any():
+        assert ch.health.stuck
+        assert not ch.health.ok
+
+
+def test_health_report_shape():
+    h = ChainHealth(num_chains=2, target_warmup=10, target_samples=20,
+                    completed=30, divergences=np.array([1, 0]),
+                    nonfinite=np.zeros(2, np.int64))
+    assert h.ok
+    r = h.report()
+    assert "OK" in r and "divergences: 1" in r
+
+
+# ---------------------------------------------------------------------------
+# degenerate diagnostics warn instead of silent nan
+# ---------------------------------------------------------------------------
+def test_ess_short_chain_warns():
+    with pytest.warns(RuntimeWarning, match="need >= 4"):
+        assert np.isnan(effective_sample_size(np.ones((2, 3))))
+
+
+def test_ess_zero_variance_warns():
+    with pytest.warns(RuntimeWarning, match="zero-variance"):
+        assert np.isnan(effective_sample_size(np.ones((2, 100))))
+
+
+def test_split_rhat_short_chain_warns():
+    with pytest.warns(RuntimeWarning, match="need >= 4"):
+        assert np.isnan(split_rhat(np.ones((2, 3))))
+
+
+def test_split_rhat_all_constant_warns_nan():
+    with pytest.warns(RuntimeWarning, match="chains constant"):
+        assert np.isnan(split_rhat(np.full((2, 50), 1.5)))
+
+
+def test_split_rhat_stuck_at_different_points_is_inf():
+    x = np.stack([np.full(50, 0.0), np.full(50, 5.0)])
+    with pytest.warns(RuntimeWarning, match="different points"):
+        assert np.isinf(split_rhat(x))
+
+
+def test_summary_renders_degenerate_as_na():
+    from repro.infer import Chain
+    ch = Chain({"mu": np.full((2, 50), 1.5)})
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        s = ch.summary()
+    assert "n/a" in s
+
+
+# ---------------------------------------------------------------------------
+# PreemptionHandler context manager
+# ---------------------------------------------------------------------------
+def test_preemption_handler_context_manager_uninstalls():
+    import signal
+    prev = signal.getsignal(signal.SIGTERM)
+    with PreemptionHandler() as ph:
+        assert signal.getsignal(signal.SIGTERM) == ph._on_signal
+        assert not ph.preempted
+        ph.trigger()
+        assert ph.preempted
+    assert signal.getsignal(signal.SIGTERM) == prev
+
+
+def test_scripted_preemption_polls():
+    ph = ScriptedPreemption(after_polls=2)
+    assert not ph.preempted
+    assert not ph.preempted
+    assert ph.preempted
+    assert ph.preempted
+
+
+def test_simulated_kill_is_base_exception():
+    assert issubclass(SimulatedKill, BaseException)
+    assert not issubclass(SimulatedKill, Exception)

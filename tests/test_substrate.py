@@ -112,6 +112,31 @@ def test_async_checkpointer(tmp_path):
     assert committed_steps(d) == [1, 2]
 
 
+def test_ckpt_meta_roundtrip(tmp_path):
+    from repro.ckpt.checkpoint import read_meta
+    d = str(tmp_path / "ck")
+    save(d, 3, _tree(), meta={"num_chains": 4, "sampler": "HMC"})
+    assert read_meta(d) == {"num_chains": 4, "sampler": "HMC"}
+    assert read_meta(d, 3)["sampler"] == "HMC"
+    save(d, 5, _tree())
+    assert read_meta(d, 5) == {}  # meta is optional
+
+
+def test_ckpt_writer_killed_before_commit_is_invisible(tmp_path):
+    """A writer that dies after the rename but BEFORE the COMMITTED
+    marker (the torn-checkpoint window) must leave restore/latest_step
+    pointing at the previous committed step."""
+    from repro.runtime.faultinject import torn_save
+    d = str(tmp_path / "ck")
+    save(d, 1, _tree(1))
+    torn_save(d, 2, _tree(2), kill_at="before_commit")
+    torn_save(d, 3, _tree(3), kill_at="before_rename")
+    assert os.path.isdir(os.path.join(d, "step_00000002"))  # renamed...
+    assert committed_steps(d) == [1]                        # ...not visible
+    step, _ = restore(d, target=_tree())
+    assert step == 1
+
+
 def test_ckpt_elastic_restore_is_mesh_agnostic(tmp_path):
     """Checkpoints restore regardless of the saving mesh (arrays are
     gathered): simulate by saving plain arrays and re-sharding on load."""
