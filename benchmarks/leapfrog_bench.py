@@ -66,7 +66,10 @@ def _bench_models():
                              LogNormal, Normal, StudentT, Uniform)
     from repro.models import paper_suite
 
-    out = [("gaussian_10k", paper_suite.build("gaussian_10k").model)]
+    out = [("gaussian_10k", paper_suite.build("gaussian_10k").model),
+           # conditionally-separable hierarchy: coupled (mu, tau) head,
+           # analytic theta leaf block with Normal attach
+           ("eight_schools", paper_suite.build("eight_schools").model)]
 
     @model
     def gamma_mix_4k():
@@ -150,12 +153,13 @@ def bench_one(name: str, m) -> Dict:
     err_lp = float(abs(float(rlp) - float(flp))
                    / (1.0 + abs(float(rlp))))
     speedup = ref_us / max(fused_us, 1e-9)
+    uop = getattr(spec, "uniform_op", getattr(spec, "uniform_opA", None))
+    kind = type(spec).__name__
     return entry(f"leapfrog/{name}", fused_us, dim=dim, n_steps=N_STEPS,
                  supported=True, reference_us=ref_us, speedup=speedup,
                  max_err_q=err_q, max_err_p=err_p, max_err_grad=err_g,
-                 rel_err_logp=err_lp,
-                 uniform_op=(None if spec.uniform_op is None
-                             else int(spec.uniform_op)))
+                 rel_err_logp=err_lp, spec_kind=kind,
+                 uniform_op=(None if uop is None else int(uop)))
 
 
 def report() -> Dict:

@@ -115,6 +115,15 @@ class Interpreter:
     def record_deterministic(self, name: str, value) -> None:
         self.deterministics[name] = value
 
+    def factor_site(self, name: str, logp, observed: bool) -> None:
+        """Accumulate a named ``factor()``/``prior_factor()`` term.
+
+        A dedicated hook (rather than a bare ``accum``) so that recording
+        interpreters — ``repro.analysis``'s graph tracer, the potential
+        compiler — can observe factor nodes with their names and values.
+        """
+        self.accum(jnp.sum(logp), observed=observed)
+
     # -- tilde dispatch ----------------------------------------------------------
     def tilde(self, vn: VarName, dist, value, observed: bool):
         raise NotImplementedError

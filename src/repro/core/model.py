@@ -189,6 +189,19 @@ class Model:
 
         return logdensity
 
+    # -- static analysis -------------------------------------------------------
+    def analyze(self, key=None):
+        """Static analysis bundle: dependency graph, lints, fusion coverage.
+
+        Returns a :class:`repro.analysis.ModelAnalysis` — ``.findings``
+        (lint results, errors first), ``.coverage`` (per-site fused
+        kernel table + the potential-spec verdict that decides whether
+        ``leapfrog="auto"`` runs fused), ``.render()`` for the human
+        report. ``python -m repro.analyze`` is the CLI equivalent.
+        """
+        from repro.analysis import analyze_model
+        return analyze_model(self, key=key)
+
     # -- predictive / posterior draws -----------------------------------------
     def sample_prior(self, key) -> Dict[str, Any]:
         return self.untyped_trace(key).as_dict()

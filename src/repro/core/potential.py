@@ -37,13 +37,17 @@ specialised code" economics, applied to the integrator itself.
 """
 from __future__ import annotations
 
+import dataclasses
+import logging
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.contexts import Context
+from repro.bijectors import bijector_for
+from repro.core.contexts import Context, DefaultContext
 from repro.core.interpreters import LinkedEvaluator
 from repro.core.model import Model
 from repro.core.varinfo import TypedVarInfo
@@ -52,13 +56,27 @@ from repro.dists.continuous import (Beta, Cauchy, Exponential, Flat, Gamma,
                                     Normal, StudentT, Uniform)
 from repro.dists.multivariate import MvNormalDiag
 from repro.kernels.fused_leapfrog.spec import (OP_EXP, OP_NORMAL, OP_SOFTPLUS,
-                                               OP_TLOG, OP_ZERO, PotentialSpec)
+                                               OP_TLOG, OP_ZERO,
+                                               CondPotentialSpec,
+                                               PotentialSpec)
 
-__all__ = ["build_potential_spec"]
+__all__ = ["build_potential_spec", "compile_potential",
+           "PotentialCompileResult"]
+
+_LOG = logging.getLogger("repro.potential")
+
+# coupled-head budget: the head gradient goes through autodiff of the aux
+# replay, so keep the dense block small (eight-schools-style top levels)
+_MAX_HEAD = 64
 
 
 class _NotSeparable(Exception):
-    pass
+    """Density not (conditionally) separable; carries the diagnosis."""
+
+    def __init__(self, reason: str, site: Optional[str] = None):
+        super().__init__(reason)
+        self.reason = reason
+        self.site = site
 
 
 class _Recorder(LinkedEvaluator):
@@ -186,16 +204,14 @@ def build_potential_spec(model: Model, tvi_linked: TypedVarInfo,
 
     Returns
     -------
-    PotentialSpec or None
-        ``None`` whenever the density is not (provably) separable; the
-        caller falls back to the generic autodiff leapfrog.
+    PotentialSpec or CondPotentialSpec or None
+        ``None`` whenever the density is neither separable nor
+        conditionally separable; the caller falls back to the generic
+        autodiff leapfrog. :func:`compile_potential` returns the same
+        spec plus the diagnosis explaining a ``None``.
     """
-    try:
-        return _build(model, tvi_linked, ctx, backend)
-    except _NotSeparable:
-        return None
-    except Exception:
-        return None
+    return compile_potential(model, tvi_linked, ctx=ctx,
+                             backend=backend).spec
 
 
 def _build(model, tvi, ctx, backend):
@@ -271,3 +287,446 @@ def _build(model, tvi, ctx, backend):
 
     return PotentialSpec(op=op, c0=c[0], c1=c[1], c2=c[2], c3=c[3],
                          const=float(const), dim=dim)
+
+
+# ---------------------------------------------------------------------------
+# Conditionally-separable compiler (coupled head + separable leaves)
+# ---------------------------------------------------------------------------
+# Leaf priors must compile to an opcode whose coefficients may be traced
+# functions of the head. Keyed by distribution CLASS NAME so the graph
+# gate can pre-filter without instantiating anything.
+_COND_LEAF_FAMILIES = frozenset([
+    "Flat", "Normal", "MvNormalDiag", "LogNormal", "HalfNormal", "Gamma",
+    "InverseGamma", "Exponential", "Beta", "Uniform", "StudentT", "Cauchy",
+])
+
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def _compile_site_traced(dist, shape):
+    """Traced analogue of :func:`_compile_site`: ``(op, (c0..c3), resid)``.
+
+    Coefficients are jnp arrays broadcast to ``shape`` and MAY be traced
+    functions of the head block; ``resid`` is the site's normaliser —
+    u-independent in the LEAF coordinate but possibly head-dependent
+    (e.g. ``-log tau`` of an eight-schools ``theta`` prior), summed over
+    the site.
+    """
+    from jax.scipy import special as jsp
+
+    f = jnp.result_type(float)
+
+    def b(v):
+        return jnp.broadcast_to(jnp.asarray(v, f), shape)
+
+    zeros = jnp.zeros(shape, f)
+    ones = jnp.ones(shape, f)
+    zero = jnp.zeros((), f)
+    t = type(dist)
+    if t is Flat:
+        return OP_ZERO, (zeros, zeros, zeros, zeros), zero
+    if t in (Normal, MvNormalDiag, LogNormal):
+        s = b(dist.scale_diag if t is MvNormalDiag else dist.scale)
+        loc = b(dist.loc)
+        resid = -jnp.sum(jnp.log(s)) - _HALF_LOG_2PI * s.size
+        return OP_NORMAL, (loc, 1.0 / s, zeros, zeros), resid
+    if t is HalfNormal:
+        s = b(dist.scale)
+        resid = jnp.sum(0.5 * math.log(2.0 / math.pi) - jnp.log(s))
+        return OP_EXP, (ones, 0.5 / (s * s), 2.0 * ones, zeros), resid
+    if t is Gamma:
+        a, r = b(dist.concentration), b(dist.rate)
+        resid = jnp.sum(jsp.xlogy(a, r) - jsp.gammaln(a))
+        return OP_EXP, (a, r, ones, zeros), resid
+    if t is InverseGamma:
+        a, r = b(dist.concentration), b(dist.rate)
+        resid = jnp.sum(jsp.xlogy(a, r) - jsp.gammaln(a))
+        return OP_EXP, (-a, r, -ones, zeros), resid
+    if t is Exponential:
+        r = b(dist.rate)
+        return OP_EXP, (ones, r, ones, zeros), jnp.sum(jnp.log(r))
+    if t is Beta:
+        a, c = b(dist.concentration1), b(dist.concentration0)
+        resid = jnp.sum(jsp.gammaln(a + c) - jsp.gammaln(a) - jsp.gammaln(c))
+        return OP_SOFTPLUS, (a, c, zeros, zeros), resid
+    if t is Uniform:
+        # -log(width) normaliser cancels against the sigmoid-link
+        # jacobian's +log(width); what is left is exactly SOFTPLUS(1, 1)
+        return OP_SOFTPLUS, (ones, ones, zeros, zeros), zero
+    if t is StudentT:
+        df, s = b(dist.df), b(dist.scale)
+        resid = jnp.sum(jsp.gammaln(0.5 * (df + 1.0))
+                        - jsp.gammaln(0.5 * df)
+                        - 0.5 * jnp.log(df * math.pi) - jnp.log(s))
+        return (OP_TLOG, ((df + 1.0) / 2.0, 1.0 / df, b(dist.loc), 1.0 / s),
+                resid)
+    if t is Cauchy:
+        s = b(dist.scale)
+        resid = jnp.sum(-math.log(math.pi) - jnp.log(s))
+        return OP_TLOG, (ones, ones, b(dist.loc), 1.0 / s), resid
+    raise _NotSeparable(f"no traced opcode for {t.__name__}")
+
+
+def _attach_normal(dist, value, leaf_unc_shape):
+    """Completed-square coefficients of a Normal observation on a leaf.
+
+    The observation ``y ~ Normal(x_leaf, s)`` (``y`` possibly carrying
+    extra leading axes that broadcast over the leaf — repeated
+    measurements) collapses, per leaf coordinate, to
+
+        -0.5 * ((u - b0) * b1)^2 + resid
+
+    with ``b1 = sqrt(sum_r 1/s^2)`` (precision aggregate), ``b0`` the
+    precision-weighted data mean and ``resid`` the leftover data-only
+    quadratic plus the Gaussian normalisers. Exact — no approximation.
+    """
+    f = jnp.result_type(float)
+    y = jnp.asarray(value, f)
+    s = jnp.asarray(dist.scale, f)
+    shape = jnp.broadcast_shapes(jnp.shape(y), jnp.shape(s), leaf_unc_shape)
+    n_l = int(np.prod(leaf_unc_shape)) if leaf_unc_shape else 1
+    n_tot = int(np.prod(shape)) if shape else 1
+    if leaf_unc_shape and \
+            shape[len(shape) - len(leaf_unc_shape):] != tuple(leaf_unc_shape):
+        raise _NotSeparable(
+            "observation shape does not broadcast over the leaf")
+    yb = jnp.broadcast_to(y, shape).reshape(-1, n_l)
+    sb = jnp.broadcast_to(s, shape).reshape(-1, n_l)
+    w = 1.0 / (sb * sb)
+    prec = jnp.sum(w, axis=0)
+    mean = jnp.sum(w * yb, axis=0) / prec
+    resid = (-0.5 * (jnp.sum(w * yb * yb) - jnp.sum(prec * mean * mean))
+             - jnp.sum(jnp.log(sb)) - _HALF_LOG_2PI * n_tot)
+    return mean, jnp.sqrt(prec), resid
+
+
+class _CondRecorder(LinkedEvaluator):
+    """LinkedEvaluator that treats a designated leaf set symbolically.
+
+    Head sites replay normally — their prior + jacobian terms accumulate
+    into the interpreter logp, which becomes the spec's residual. Leaf
+    sites return their RECORDED constrained constants and instead record
+    traced opcode coefficients; Normal observations whose ``loc`` is
+    exactly a leaf's value are captured as completed-square attach terms
+    rather than accumulated. Any structure this recorder cannot express
+    lands in ``self.failures`` (checked once, on the first eager run).
+    """
+
+    def __init__(self, tvi, ctx, leaf_syms):
+        super().__init__(tvi, ctx=ctx, eager=False)
+        self.leaf_syms = frozenset(leaf_syms)
+        self.leaf_coeffs = {}   # sym -> (op, (c0..c3), resid)
+        self.leaf_consts = []   # (sym, constrained constant) in visit order
+        self.attach = {}        # sym -> (b0, b1, resid)
+        self.failures = []
+
+    def tilde(self, vn, dist, value, observed):
+        if observed:
+            return self._observed(vn, dist, value)
+        if vn.sym not in self.leaf_syms:
+            return super().tilde(vn, dist, value, observed)
+        if vn.indexed:
+            self.failures.append(f"leaf site '{vn}' is index-grouped")
+        if vn.sym in self.leaf_coeffs:
+            self.failures.append(f"leaf site '{vn.sym}' replayed twice")
+        i = self.tvi.site_index(vn.sym)
+        u = self.tvi.values[i]
+        bij = bijector_for(dist)
+        x = bij.forward(u)
+        try:
+            self.leaf_coeffs[vn.sym] = _compile_site_traced(
+                dist, tuple(np.shape(u)))
+        except _NotSeparable as e:
+            self.failures.append(f"leaf '{vn.sym}': {e.reason}")
+        self.leaf_consts.append((vn.sym, x))
+        self.constrained[vn.sym] = x
+        return x
+
+    def _match_leaf(self, loc):
+        for sym, x in self.leaf_consts:
+            if loc is x:
+                return sym
+        if isinstance(loc, jax.core.Tracer):
+            return None
+        la = np.asarray(jax.device_get(loc))
+        for sym, x in self.leaf_consts:
+            if isinstance(x, jax.core.Tracer):
+                continue
+            if np.array_equal(la, np.asarray(jax.device_get(x))):
+                return sym
+        return None
+
+    def _observed(self, vn, dist, value):
+        if not self.ctx.wants_site(vn.sym, True):
+            return value
+        sym = self._match_leaf(dist.loc) if type(dist) is Normal else None
+        if sym is None:
+            self.site_logp(dist, value, observed=True)
+            return value
+        if sym in self.attach:
+            self.failures.append(
+                f"leaf '{sym}' has multiple observation attachments")
+            return value
+        i = self.tvi.site_index(sym)
+        try:
+            self.attach[sym] = _attach_normal(
+                dist, value, tuple(np.shape(self.tvi.values[i])))
+        except _NotSeparable as e:
+            self.failures.append(f"observation '{vn}': {e.reason}")
+        return value
+
+
+def _build_cond(model, tvi, ctx, backend, graph):
+    """Compile a coupled hierarchy to a :class:`CondPotentialSpec`.
+
+    Partition = graph heads (+ any leaf whose prior family/support the
+    traced opcode table cannot express, promoted into the head where the
+    generic replay handles it); the remaining leaves must only feed
+    observations, and only as attachable Normal locations.
+    """
+    assert tvi.linked
+    if ctx is not None and type(ctx) is not DefaultContext:
+        raise _NotSeparable(
+            "conditional spec requires the default context")
+    layout = tvi.layout
+    dim = layout.unc_size
+    if dim == 0:
+        raise _NotSeparable("empty trace")
+    pnodes = {n.name: n for n in graph.param_nodes()}
+    head = set(graph.head_syms())
+
+    leaf = []
+    for i, m in enumerate(tvi.metas):
+        node = pnodes.get(m.name)
+        if node is None:
+            raise _NotSeparable(f"site '{m.name}' missing from graph")
+        if m.name in head:
+            continue
+        if (m.support in ("real", "positive", "unit_interval", "interval")
+                and not m.grouped and node.dist in _COND_LEAF_FAMILIES):
+            leaf.append(m.name)
+        else:
+            head.add(m.name)  # generic replay covers it
+    if not leaf:
+        raise _NotSeparable("no separable leaf block given the head")
+    leafset = set(leaf)
+
+    head_sites = [i for i, m in enumerate(tvi.metas) if m.name in head]
+    leaf_sites = [i for i, m in enumerate(tvi.metas) if m.name in leafset]
+    head_size = sum(layout.sites[i].unc_size for i in head_sites)
+    if head_size > _MAX_HEAD:
+        raise _NotSeparable(
+            f"coupled head too large ({head_size} > {_MAX_HEAD} coords)")
+
+    # graph pre-checks: leaves may ONLY feed attachable Normal observations
+    must_attach = {}
+    for n in graph.data_nodes():
+        ldeps = set(n.deps) & leafset
+        if not ldeps:
+            continue
+        if n.kind != "observed":
+            raise _NotSeparable(
+                f"{n.kind} term '{n.name}' depends on leaf site(s) "
+                f"{sorted(ldeps)}", site=n.name)
+        if n.dist != "Normal":
+            raise _NotSeparable(
+                f"observation '{n.name}' ({n.dist}) depends on leaf "
+                f"site(s) {sorted(ldeps)} — only Normal observations "
+                "attach", site=n.name)
+        (lsym,) = ldeps if len(ldeps) == 1 else (None,)
+        if lsym is None:
+            raise _NotSeparable(
+                f"observation '{n.name}' mixes leaf sites {sorted(ldeps)}",
+                site=n.name)
+        if set(n.field_dep("scale")) & leafset:
+            raise _NotSeparable(
+                f"observation '{n.name}' scale depends on leaf '{lsym}'",
+                site=n.name)
+        if set(n.field_dep("loc")) - {lsym}:
+            raise _NotSeparable(
+                f"observation '{n.name}' loc mixes leaf '{lsym}' with "
+                "other parameters", site=n.name)
+        if pnodes[lsym].support != "real":
+            raise _NotSeparable(
+                f"leaf '{lsym}' has a non-identity link; cannot attach "
+                f"observation '{n.name}'", site=lsym)
+        if lsym in must_attach:
+            raise _NotSeparable(
+                f"leaf '{lsym}' has multiple observation attachments",
+                site=lsym)
+        must_attach[lsym] = n.name
+
+    head_slices = [(layout.sites[i].unc_offset, layout.sites[i].unc_size,
+                    layout.sites[i].unc_shape) for i in head_sites]
+    leaf_slices = [(layout.sites[i].unc_offset, layout.sites[i].unc_size)
+                   for i in leaf_sites]
+    idx = np.arange(dim, dtype=np.int32)
+    head_idx = (np.concatenate([idx[o:o + s] for o, s, _ in head_slices])
+                if head_slices else np.zeros((0,), np.int32))
+    leaf_idx = np.concatenate([idx[o:o + s] for o, s in leaf_slices])
+    leaf_order = [tvi.metas[i].name for i in leaf_sites]
+    leaf_shapes = {tvi.metas[i].name: layout.sites[i].unc_shape
+                   for i in leaf_sites}
+    values0 = tvi.values
+
+    def aux_parts(u_head):
+        vals = list(values0)
+        off = 0
+        for i, (_, s, shp) in zip(head_sites, head_slices):
+            vals[i] = jnp.reshape(u_head[off:off + s], shp)
+            off += s
+        rec = _CondRecorder(tvi.replace_values(tuple(vals)), ctx, leafset)
+        model._run(rec)
+        resid = rec.logp  # head priors + jacobians, factors, head-only obs
+        failures = list(rec.failures)
+        cs = ([], [], [], [])
+        b0s, b1s, ops_, mask = [], [], [], []
+        for sym in leaf_order:
+            span = int(np.prod(leaf_shapes[sym])) if leaf_shapes[sym] else 1
+            parts = rec.leaf_coeffs.get(sym)
+            if parts is None:
+                failures.append(f"leaf '{sym}' not replayed")
+                parts = (OP_ZERO, (jnp.zeros(span),) * 4, jnp.zeros(()))
+            opc, coeffs, r = parts
+            resid = resid + r
+            ops_.append(np.full((span,), opc, np.int32))
+            for dst, src in zip(cs, coeffs):
+                dst.append(jnp.ravel(src))
+            at = rec.attach.get(sym)
+            if at is None:
+                if sym in must_attach:
+                    failures.append(
+                        f"observation '{must_attach[sym]}' did not match "
+                        f"leaf '{sym}' (loc is not the leaf value)")
+                b0s.append(jnp.zeros(span))
+                b1s.append(jnp.zeros(span))
+                mask.append(np.zeros(span, bool))
+            else:
+                b0, b1, ar = at
+                resid = resid + ar
+                b0s.append(jnp.ravel(b0))
+                b1s.append(jnp.ravel(b1))
+                mask.append(np.ones(span, bool))
+        dyn = (tuple(jnp.concatenate(d) for d in cs)
+               + (jnp.concatenate(b0s), jnp.concatenate(b1s), resid))
+        return dyn, (np.concatenate(ops_), np.concatenate(mask), failures)
+
+    u0 = np.asarray(jax.device_get(tvi.flat()), np.float64)
+    u0h = jnp.asarray(u0[head_idx], jnp.float32)
+    _, (opA, attach_mask, failures) = aux_parts(u0h)
+    if failures:
+        raise _NotSeparable(failures[0])
+
+    def aux_fn(u_head):
+        return aux_parts(u_head)[0]
+
+    spec = CondPotentialSpec(
+        head_idx=head_idx, leaf_idx=leaf_idx, opA=opA,
+        attach_mask=attach_mask, aux_fn=aux_fn, const=0.0, dim=dim,
+        head_syms=tuple(tvi.metas[i].name for i in head_sites))
+
+    # -- const by probing + validation against the reference density --------
+    from repro.kernels.fused_leapfrog.spec import \
+        cond_potential_value_and_grad
+    ld = model.make_logdensity_fn(tvi, ctx=ctx, backend=backend)
+    v0 = float(jax.device_get(ld(jnp.asarray(u0, jnp.float32))))
+    s0, _ = cond_potential_value_and_grad(spec, jnp.asarray(u0, jnp.float32))
+    s0 = float(jax.device_get(s0))
+    if not (np.isfinite(v0) and np.isfinite(s0)):
+        raise _NotSeparable("non-finite log-density at the recorded point")
+    spec = dataclasses.replace(spec, const=float(v0 - s0))
+
+    key = jax.random.PRNGKey(0)
+    for k in range(2):
+        du = jax.random.normal(jax.random.fold_in(key, k), (dim,))
+        uj = jnp.asarray(u0 + 0.5 * np.asarray(jax.device_get(du),
+                                               np.float64), jnp.float32)
+        vr = float(jax.device_get(ld(uj)))
+        vs, gs = cond_potential_value_and_grad(spec, uj)
+        vs = float(jax.device_get(vs))
+        if not np.isfinite(vr) or abs(vs - vr) > 1e-3 * (1.0 + abs(vr)):
+            raise _NotSeparable("value mismatch at probe point")
+        gr = np.asarray(jax.device_get(jax.grad(ld)(uj)), np.float64)
+        if not np.allclose(np.asarray(jax.device_get(gs), np.float64), gr,
+                           rtol=2e-3, atol=2e-3):
+            raise _NotSeparable("gradient mismatch at probe point")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PotentialCompileResult:
+    """Outcome of :func:`compile_potential` — spec OR diagnosis, never both.
+
+    ``kind`` is ``"separable"`` / ``"conditional"`` when ``spec`` is set;
+    otherwise ``reason`` says exactly why the fused integrator cannot run
+    this model (and ``site`` names the offending site when known) — the
+    same string samplers surface as ``TransitionKernel.spec_reason``.
+    """
+
+    spec: object = None
+    kind: Optional[str] = None
+    reason: Optional[str] = None
+    site: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.spec is not None
+
+
+def compile_potential(model: Model, tvi_linked: TypedVarInfo,
+                      ctx: Optional[Context] = None,
+                      backend: str = "fused",
+                      allow_conditional: bool = True
+                      ) -> PotentialCompileResult:
+    """Compile the linked density to the best available fused form.
+
+    The dependency graph (``repro.analysis.graph``) gates the attempt:
+    dynamic structure fails fast with the lint's reason; a fully
+    edge-free graph goes to the separable compiler (:func:`_build`);
+    a coupled graph goes to the conditionally-separable compiler
+    (:func:`_build_cond`). Every failure path records WHY — nothing is
+    silently swallowed any more.
+    """
+    graph, graph_reason = None, None
+    try:
+        from repro.analysis.graph import build_model_graph
+        graph = build_model_graph(model, tvi_linked, ctx=ctx)
+    except Exception as e:  # graph failure: fall through to probing
+        graph_reason = f"dependency-graph construction failed: {e}"
+    if graph is not None and graph.dynamic:
+        reason = f"dynamic model structure: {graph.dynamic_reason}"
+        _LOG.debug("potential compile: %s", reason)
+        return PotentialCompileResult(reason=reason)
+
+    edge = graph.coupling_edge() if graph is not None else None
+    if edge is None:
+        try:
+            spec = _build(model, tvi_linked, ctx, backend)
+            return PotentialCompileResult(spec=spec, kind="separable")
+        except _NotSeparable as e:
+            reason, site = e.reason, e.site
+        except Exception as e:
+            reason, site = f"spec compilation failed: {e}", None
+        if graph_reason is not None:
+            reason = f"{reason} ({graph_reason})"
+        _LOG.debug("potential compile: %s", reason)
+        return PotentialCompileResult(reason=reason, site=site)
+
+    dep, tgt = edge
+    cause = f"site '{tgt}' depends on parameter '{dep}'"
+    if not allow_conditional:
+        return PotentialCompileResult(
+            reason=f"coupled parameters: {cause}", site=tgt)
+    try:
+        spec = _build_cond(model, tvi_linked, ctx, backend, graph)
+        return PotentialCompileResult(spec=spec, kind="conditional")
+    except _NotSeparable as e:
+        reason, site = e.reason, e.site or tgt
+    except Exception as e:
+        reason, site = str(e), tgt
+    reason = f"coupled ({cause}); conditional compile failed: {reason}"
+    _LOG.debug("potential compile: %s", reason)
+    return PotentialCompileResult(reason=reason, site=site)

@@ -127,8 +127,7 @@ def factor(name: str, logp):
     computed in-model (HMM forward algorithm)."""
     it = current_interpreter()
     if it.ctx.wants_site(str(name), True):
-        import jax.numpy as jnp
-        it.accum(jnp.sum(logp), observed=True)
+        it.factor_site(str(name), logp, observed=True)
 
 
 def prior_factor(name: str, logp):
@@ -141,5 +140,4 @@ def prior_factor(name: str, logp):
     minibatch scaling then leaves the prior term unbiased (paper §3.1)."""
     it = current_interpreter()
     if it.ctx.wants_site(str(name), False):
-        import jax.numpy as jnp
-        it.accum(jnp.sum(logp), observed=False)
+        it.factor_site(str(name), logp, observed=False)

@@ -41,9 +41,31 @@ from repro.bijectors import bijector_for
 from repro.core.varname import VarName
 
 __all__ = ["UntypedVarInfo", "TypedVarInfo", "typify", "SiteMeta",
-           "SiteSlice", "FlatLayout", "layout_for"]
+           "SiteSlice", "FlatLayout", "layout_for",
+           "assert_continuous_supports"]
 
 _DISCRETE_SUPPORTS = ("discrete", "nonnegative_int", "binary")
+
+
+def assert_continuous_supports(tvi: "TypedVarInfo", algorithm: str) -> None:
+    """Fail fast when a gradient-based algorithm meets discrete sites.
+
+    Raises a ``ValueError`` naming every discrete parameter site and the
+    algorithm, with the marginalisation remedy — instead of letting the
+    failure surface later as an opaque ``link()`` error deep inside the
+    sampler setup.
+    """
+    bad = [(m.name, m.support) for m in tvi.metas
+           if m.support in _DISCRETE_SUPPORTS]
+    if bad:
+        sites = ", ".join(f"'{n}' ({s})" for n, s in bad)
+        raise ValueError(
+            f"{algorithm} requires continuous parameter sites, but the "
+            f"model has discrete parameter site(s) {sites}. Gradient-based "
+            "inference cannot move discrete coordinates — marginalise them "
+            "out inside the model (sum over the categories) or sample them "
+            "with a non-gradient kernel (e.g. MH)."
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core.contexts import Context
 from repro.core.model import Model
-from repro.core.varinfo import TypedVarInfo
+from repro.core.varinfo import TypedVarInfo, assert_continuous_supports
 from repro.optim import adam, apply_updates
 
 __all__ = ["ADVI", "ADVIResult"]
@@ -51,7 +51,9 @@ class ADVI:
             init_varinfo: Optional[TypedVarInfo] = None) -> ADVIResult:
         k_init, k_run = jax.random.split(key)
         tvi = (init_varinfo if init_varinfo is not None
-               else m.typed_varinfo(k_init)).link()
+               else m.typed_varinfo(k_init))
+        assert_continuous_supports(tvi, "ADVI")
+        tvi = tvi.link()
         logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
         dim = int(tvi.flat().shape[0])
 

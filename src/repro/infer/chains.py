@@ -211,12 +211,19 @@ class TransitionKernel(NamedTuple):
         ``(state, key) -> (state, out)`` with ``out`` a dict of per-draw
         arrays that MUST contain ``"q"`` (the flat position, shape
         ``(dim,)``) and ``"logp"``; extra keys become ``Chain.stats``.
+    spec_reason : str, optional
+        Why the fused-integrator PotentialSpec could NOT be compiled for
+        this kernel (``None`` when a spec is in use or was never
+        wanted) — the diagnosis from ``repro.core.potential``, surfaced
+        so ``leapfrog="auto"`` fallbacks are explainable instead of
+        silent.
     """
 
     init: Callable
     warm: Callable
     finalize: Callable
     step: Callable
+    spec_reason: Optional[str] = None
 
 
 def package_draws(tvi_linked, qs, stats: Optional[Dict[str, Any]] = None) -> Chain:
@@ -265,19 +272,26 @@ def setup_chain_driver(key, model, kernel, *, num_chains: int,
     import jax
     import jax.numpy as jnp
 
+    from repro.core.varinfo import assert_continuous_supports
+
     k_init, k_run = jax.random.split(key)
     tvi = (init_varinfo if init_varinfo is not None
-           else model.typed_varinfo(k_init)).link()
+           else model.typed_varinfo(k_init))
+    assert_continuous_supports(tvi, type(kernel).__name__)
+    tvi = tvi.link()
     logdensity = model.make_logdensity_fn(tvi, backend=backend)
     dim = int(tvi.num_flat)
-    spec = None
+    spec, spec_reason = None, None
     if getattr(kernel, "uses_potential_spec", False):
         # lazy import: chains.py is imported by hmc.py/nuts.py, which in
         # turn are what core.potential's validation machinery sits beside
-        from repro.core.potential import build_potential_spec
-        spec = build_potential_spec(model, tvi, backend=backend)
+        from repro.core.potential import compile_potential
+        res = compile_potential(model, tvi, backend=backend)
+        spec, spec_reason = res.spec, res.reason
     kern = (kernel.make_kernel(logdensity, dim, spec=spec)
             if spec is not None else kernel.make_kernel(logdensity, dim))
+    if spec_reason is not None and getattr(kern, "spec_reason", None) is None:
+        kern = kern._replace(spec_reason=spec_reason)
 
     q0 = tvi.flat()
     q0s = jnp.broadcast_to(q0, (num_chains, dim))

@@ -24,8 +24,8 @@ import numpy as np
 
 from repro.core.contexts import Context
 from repro.core.model import Model
-from repro.core.potential import build_potential_spec
-from repro.core.varinfo import TypedVarInfo
+from repro.core.potential import compile_potential
+from repro.core.varinfo import TypedVarInfo, assert_continuous_supports
 from repro.infer.chains import Chain, TransitionKernel, package_draws
 from repro.kernels.fused_leapfrog import (fused_leapfrog,
                                           potential_value_and_grad)
@@ -211,15 +211,18 @@ class HMC:
             collect: bool = True) -> Chain:
         k_init, k_run = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
         tvi = (init_varinfo if init_varinfo is not None
-               else m.typed_varinfo(k_init)).link()
+               else m.typed_varinfo(k_init))
+        assert_continuous_supports(tvi, "HMC")
+        tvi = tvi.link()
         logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
-        spec = None
+        spec, spec_reason = None, None
         if self.uses_potential_spec:
-            spec = build_potential_spec(m, tvi, ctx=ctx, backend=self.backend)
+            res = compile_potential(m, tvi, ctx=ctx, backend=self.backend)
+            spec, spec_reason = res.spec, res.reason
         # ONE adaptation/transition code path for fused and reference
         # integrators: everything below routes through the TransitionKernel
         kern = self.make_kernel(logdensity, int(tvi.flat().shape[0]),
-                                spec=spec)
+                                spec=spec, spec_reason=spec_reason)
 
         def one_chain(key, q0):
             state = kern.init(q0)
@@ -277,7 +280,8 @@ class HMC:
 
     # -- TransitionKernel protocol (run_chains driver) -------------------------
     def make_kernel(self, logdensity: Callable, dim: int,
-                    spec=None) -> TransitionKernel:
+                    spec=None, spec_reason: Optional[str] = None
+                    ) -> TransitionKernel:
         """Build the pure HMC :class:`TransitionKernel` for ``run_chains``.
 
         Parameters
@@ -287,11 +291,16 @@ class HMC:
             ``Model.make_logdensity_fn`` output — the fused hot path).
         dim : int
             Length of the flat unconstrained state.
-        spec : PotentialSpec, optional
-            Compiled separable potential (``repro.core.potential``).
-            When given (and ``leapfrog != "reference"``) the kernel uses
-            the fused integrator: analytic gradients and the whole
-            n-step leapfrog as one unit, no autodiff in the hot loop.
+        spec : PotentialSpec or CondPotentialSpec, optional
+            Compiled (conditionally-)separable potential
+            (``repro.core.potential``). When given (and ``leapfrog !=
+            "reference"``) the kernel uses the fused integrator: analytic
+            gradients and the whole n-step leapfrog as one unit, no
+            autodiff over the full state in the hot loop.
+        spec_reason : str, optional
+            Compiler diagnosis when ``spec`` is ``None`` — carried on the
+            returned kernel (``TransitionKernel.spec_reason``) and quoted
+            by the ``leapfrog="fused"`` error.
 
         Returns
         -------
@@ -304,10 +313,12 @@ class HMC:
         if self.leapfrog not in ("auto", "fused", "reference"):
             raise ValueError(f"unknown leapfrog mode {self.leapfrog!r}")
         if self.leapfrog == "fused" and spec is None:
+            why = f": {spec_reason}" if spec_reason else \
+                " (PotentialSpec compilation failed or was not attempted)"
             raise ValueError(
-                "leapfrog='fused' requires a separable model (PotentialSpec "
-                "compilation failed or was not attempted); use "
-                "leapfrog='auto' to fall back to the reference integrator")
+                "leapfrog='fused' requires a (conditionally-)separable "
+                f"model{why}; use leapfrog='auto' to fall back to the "
+                "reference integrator")
         use_fused = spec is not None and self.leapfrog != "reference"
         inv_mass = None if self.inv_mass is None \
             else jnp.asarray(self.inv_mass, jnp.float32)
@@ -357,7 +368,9 @@ class HMC:
                    "diverging": div}
             return (q, logp, grad, da_state, eps), out
 
-        return TransitionKernel(init, warm, finalize, step)
+        return TransitionKernel(init, warm, finalize, step,
+                                spec_reason=None if use_fused
+                                else spec_reason)
 
     # -- untyped eager path (the paper's slow general mode) -------------------
     def run_untyped(self, key, m: Model, num_samples: int,
@@ -369,7 +382,9 @@ class HMC:
         """
         k_init, k_run = jax.random.split(key)
         tvi = (init_varinfo if init_varinfo is not None
-               else m.typed_varinfo(k_init)).link()
+               else m.typed_varinfo(k_init))
+        assert_continuous_supports(tvi, "HMC")
+        tvi = tvi.link()
         logdensity = m.make_logdensity_fn(tvi)  # NOT jitted
 
         rng = np.random.default_rng(np.asarray(jax.random.key_data(k_run))[-1])

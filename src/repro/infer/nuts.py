@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.model import Model
-from repro.core.potential import build_potential_spec
-from repro.core.varinfo import TypedVarInfo
+from repro.core.potential import compile_potential
+from repro.core.varinfo import TypedVarInfo, assert_continuous_supports
 from repro.infer.chains import Chain, TransitionKernel
 from repro.infer.hmc import DualAveraging, HMC
 from repro.kernels.fused_leapfrog import potential_value_and_grad
@@ -70,7 +70,7 @@ class NUTS:
         sampler (``run_chains`` checks this before ``make_kernel``)."""
         return self.leapfrog != "reference"
 
-    def _make_ld_grad(self, logdensity, spec):
+    def _make_ld_grad(self, logdensity, spec, spec_reason=None):
         """(logp, grad) evaluator for tree leaves.
 
         With a compiled PotentialSpec the gradient is the analytic opcode
@@ -80,10 +80,12 @@ class NUTS:
         if self.leapfrog not in ("auto", "fused", "reference"):
             raise ValueError(f"unknown leapfrog mode {self.leapfrog!r}")
         if self.leapfrog == "fused" and spec is None:
+            why = f": {spec_reason}" if spec_reason else \
+                " (PotentialSpec compilation failed or was not attempted)"
             raise ValueError(
-                "leapfrog='fused' requires a separable model (PotentialSpec "
-                "compilation failed or was not attempted); use "
-                "leapfrog='auto' to fall back to autodiff gradients")
+                "leapfrog='fused' requires a (conditionally-)separable "
+                f"model{why}; use leapfrog='auto' to fall back to autodiff "
+                "gradients")
         if spec is not None and self.leapfrog != "reference":
             return lambda q: potential_value_and_grad(spec, q)
         return jax.value_and_grad(logdensity)
@@ -235,8 +237,8 @@ class NUTS:
         return nuts_step
 
     # -- TransitionKernel protocol (run_chains driver) -------------------------
-    def make_kernel(self, logdensity, dim: int,
-                    spec=None) -> TransitionKernel:
+    def make_kernel(self, logdensity, dim: int, spec=None,
+                    spec_reason: Optional[str] = None) -> TransitionKernel:
         """Build the pure NUTS :class:`TransitionKernel` for ``run_chains``.
 
         State is ``(q, logp, grad, da_state, eps)``; ``step`` emits
@@ -245,9 +247,11 @@ class NUTS:
         1000 or NaN and was truncated). Warmup runs dual-averaging on
         the mean subtree acceptance statistic.
         ``spec`` (an optional compiled PotentialSpec) swaps the tree-leaf
-        gradient for the fused analytic evaluator.
+        gradient for the fused analytic evaluator; ``spec_reason`` (the
+        compiler diagnosis when ``spec`` is None) rides on the returned
+        kernel so the fallback is explainable.
         """
-        ld_grad = self._make_ld_grad(logdensity, spec)
+        ld_grad = self._make_ld_grad(logdensity, spec, spec_reason)
         nuts_step = self._build_step(ld_grad, dim)
         da = DualAveraging(target_accept=self.target_accept)
 
@@ -278,19 +282,25 @@ class NUTS:
                    "tree_depth": depth, "diverging": div}
             return (q, logp, grad, da_state, eps), out
 
-        return TransitionKernel(init, warm, finalize, step)
+        use_fused = spec is not None and self.leapfrog != "reference"
+        return TransitionKernel(init, warm, finalize, step,
+                                spec_reason=None if use_fused
+                                else spec_reason)
 
     def run(self, key, m: Model, num_samples: int, num_warmup: int = 500,
             init_varinfo: Optional[TypedVarInfo] = None,
             num_chains: int = 1) -> Chain:
         k_init, k_run = jax.random.split(key)
         tvi = (init_varinfo if init_varinfo is not None
-               else m.typed_varinfo(k_init)).link()
+               else m.typed_varinfo(k_init))
+        assert_continuous_supports(tvi, "NUTS")
+        tvi = tvi.link()
         logdensity = m.make_logdensity_fn(tvi, backend=self.backend)
-        spec = None
+        spec, spec_reason = None, None
         if self.uses_potential_spec:
-            spec = build_potential_spec(m, tvi, backend=self.backend)
-        ld_grad = self._make_ld_grad(logdensity, spec)
+            res = compile_potential(m, tvi, backend=self.backend)
+            spec, spec_reason = res.spec, res.reason
+        ld_grad = self._make_ld_grad(logdensity, spec, spec_reason)
         dim = int(tvi.flat().shape[0])
         da = DualAveraging(target_accept=self.target_accept)
         nuts_step = self._build_step(ld_grad, dim)

@@ -1,4 +1,5 @@
 from repro.kernels.fused_leapfrog.ops import (  # noqa: F401
     fused_leapfrog, potential_value_and_grad)
 from repro.kernels.fused_leapfrog.spec import (  # noqa: F401
-    OP_EXP, OP_NORMAL, OP_SOFTPLUS, OP_TLOG, OP_ZERO, PotentialSpec)
+    OP_EXP, OP_NORMAL, OP_SOFTPLUS, OP_TLOG, OP_ZERO, CondPotentialSpec,
+    PotentialSpec)

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.kernels.fused_leapfrog import kernel as K
 from repro.kernels.fused_leapfrog import ref
-from repro.kernels.fused_leapfrog.spec import OP_ZERO, PotentialSpec
+from repro.kernels.fused_leapfrog.spec import (OP_ZERO, CondPotentialSpec,
+                                               PotentialSpec)
 
 __all__ = ["fused_leapfrog", "potential_value_and_grad"]
 
@@ -98,6 +99,12 @@ def fused_leapfrog(spec: PotentialSpec, q, p, grad, step_size, n_steps: int,
         Final state; ``logp`` is the full potential (incl. spec const)
         at the final position — same contract as ``hmc._leapfrog``.
     """
+    if isinstance(spec, CondPotentialSpec):
+        # conditionally-separable hierarchies: leaf terms analytic, head
+        # through the tiny aux function — jnp path on every backend (the
+        # head replays model code, which the Pallas kernel cannot absorb)
+        return ref.leapfrog_cond_ref(spec, q, p, grad, step_size, n_steps,
+                                     inv_mass=inv_mass)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
@@ -138,6 +145,10 @@ def potential_value_and_grad(spec: PotentialSpec, u,
     ``fused_leapfrog``). Used for chain init and NUTS tree leaves, where
     only a single evaluation (not a whole trajectory) is needed.
     """
+    if isinstance(spec, CondPotentialSpec):
+        from repro.kernels.fused_leapfrog.spec import \
+            cond_potential_value_and_grad
+        return cond_potential_value_and_grad(spec, u)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:

@@ -14,11 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_leapfrog.spec import (OP_NORMAL, OP_ZERO,
+                                               CondPotentialSpec,
                                                PotentialSpec,
+                                               cond_potential_value_and_grad,
                                                potential_elem_grad,
                                                potential_elem_value)
 
-__all__ = ["potential_value_and_grad_ref", "leapfrog_ref"]
+__all__ = ["potential_value_and_grad_ref", "leapfrog_ref",
+           "leapfrog_cond_ref"]
 
 
 def potential_value_and_grad_ref(spec: PotentialSpec, u):
@@ -67,3 +70,29 @@ def leapfrog_ref(spec: PotentialSpec, q, p, grad, step_size, n_steps: int,
                                         uniform_op=uop)) \
         + jnp.float32(spec.const)
     return q, p, logp, grad
+
+
+def leapfrog_cond_ref(spec: CondPotentialSpec, q, p, grad, step_size,
+                      n_steps: int, inv_mass=None):
+    """n-step leapfrog on a conditionally-separable potential.
+
+    Same step ordering as :func:`leapfrog_ref`; the density/gradient come
+    from :func:`cond_potential_value_and_grad` — leaf terms analytic
+    elementwise, only the small head block goes through autodiff of the
+    auxiliary coefficient function. Runs as jnp on every backend (the
+    head term replays model code, which a generic Pallas kernel cannot
+    absorb)."""
+    im = None if inv_mass is None else jnp.asarray(inv_mass, jnp.float32)
+
+    def body(carry, _):
+        q, p, grad = carry
+        p_half = p + 0.5 * step_size * grad
+        vel = p_half if im is None else im * p_half
+        q_new = q + step_size * vel
+        logp_new, grad_new = cond_potential_value_and_grad(spec, q_new)
+        p_new = p_half + 0.5 * step_size * grad_new
+        return (q_new, p_new, grad_new), logp_new
+
+    (q, p, grad), logps = jax.lax.scan(body, (q, p, grad), None,
+                                       length=n_steps)
+    return q, p, logps[-1], grad

@@ -45,7 +45,8 @@ import numpy as np
 
 __all__ = [
     "OP_ZERO", "OP_NORMAL", "OP_EXP", "OP_SOFTPLUS", "OP_TLOG", "N_OPS",
-    "PotentialSpec", "potential_elem_value", "potential_elem_grad",
+    "PotentialSpec", "CondPotentialSpec", "potential_elem_value",
+    "potential_elem_grad", "cond_potential_value_and_grad",
 ]
 
 OP_ZERO = 0
@@ -167,3 +168,85 @@ def potential_elem_value(op, c0, c1, c2, c3, u, *, uniform_op=None):
 def potential_elem_grad(op, c0, c1, c2, c3, u, *, uniform_op=None):
     """Per-coordinate potential gradients dv/du; same shape as ``u``."""
     return _dispatch(_GRAD_FNS, op, uniform_op, u, c0, c1, c2, c3)
+
+
+# ---------------------------------------------------------------------------
+# Conditionally-separable extension (eight-schools-style hierarchies)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class CondPotentialSpec:
+    """Conditionally-separable linked potential: coupled head + leaves.
+
+    The flat vector splits into a SMALL coupled head block ``u_h``
+    (``head_idx``, e.g. the ``(mu, tau)`` of eight-schools) and a large
+    leaf block ``u_l`` (``leaf_idx``) whose density is elementwise GIVEN
+    the head:
+
+        logp(u) = sum_i vA_opA[i](u_l[i]; cA(u_h))            (leaf priors)
+                + sum_i 1[attach[i]] * -0.5((u_l[i]-b0)*b1)^2 (obs attach)
+                + resid(u_h) + const
+
+    ``aux_fn(u_h) -> (cA0..cA3, b0, b1, resid)`` re-derives the leaf
+    coefficients and the residual scalar (head priors, normalisers,
+    unattached data terms) as a traced function of the head — it is a
+    closure built by ``repro.core.potential`` that replays the model with
+    the head traced and the leaves held at their recorded constants. The
+    observation-attach term is always the completed-square Normal form,
+    so only two B coefficients are needed.
+
+    The leaf value/grad stay analytic elementwise (no autodiff over the
+    ``dim``-sized state); only the tiny head gradient goes through
+    ``jax.value_and_grad`` of ``aux_fn``. Static index/opcode arrays are
+    NumPy (compile-time constants), like :class:`PotentialSpec`.
+    """
+
+    head_idx: np.ndarray        # (H,) int32 flat indices of the head block
+    leaf_idx: np.ndarray        # (L,) int32 flat indices of the leaf block
+    opA: np.ndarray             # (L,) int32 leaf-prior opcode table
+    attach_mask: np.ndarray     # (L,) bool: observation attach per coord
+    aux_fn: object              # u_h -> (cA0, cA1, cA2, cA3, b0, b1, resid)
+    const: float
+    dim: int
+    head_syms: tuple = ()       # site symbols of the head (diagnostics)
+    uniform_opA: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "head_idx",
+                           np.asarray(self.head_idx, np.int32))
+        object.__setattr__(self, "leaf_idx",
+                           np.asarray(self.leaf_idx, np.int32))
+        object.__setattr__(self, "opA", np.asarray(self.opA, np.int32))
+        object.__setattr__(self, "attach_mask",
+                           np.asarray(self.attach_mask, bool))
+        ops = np.unique(self.opA)
+        uop = int(ops[0]) if len(ops) == 1 else None
+        object.__setattr__(self, "uniform_opA", uop)
+
+
+def cond_potential_value_and_grad(spec: CondPotentialSpec, u):
+    """Analytic-leaf ``(logp, grad)`` of a conditionally-separable
+    potential at ``u``. Leaf gradients are closed-form elementwise; the
+    head gradient differentiates the (head-sized) auxiliary function."""
+    u = jnp.asarray(u, jnp.float32)
+    hidx = jnp.asarray(spec.head_idx)
+    lidx = jnp.asarray(spec.leaf_idx)
+    opA = jnp.asarray(spec.opA)
+    mask = jnp.asarray(spec.attach_mask)
+    uh, ul = u[hidx], u[lidx]
+
+    def total(uh):
+        cA0, cA1, cA2, cA3, b0, b1, resid = spec.aux_fn(uh)
+        vA = potential_elem_value(opA, cA0, cA1, cA2, cA3, ul,
+                                  uniform_op=spec.uniform_opA)
+        zb = (ul - b0) * b1
+        vB = jnp.where(mask, -0.5 * zb * zb, 0.0)
+        t = jnp.sum(vA) + jnp.sum(vB) + resid
+        return t, (cA0, cA1, cA2, cA3, b0, b1)
+
+    (t, coeffs), g_head = jax.value_and_grad(total, has_aux=True)(uh)
+    cA0, cA1, cA2, cA3, b0, b1 = coeffs
+    g_leaf = potential_elem_grad(opA, cA0, cA1, cA2, cA3, ul,
+                                 uniform_op=spec.uniform_opA)
+    g_leaf = g_leaf + jnp.where(mask, -(ul - b0) * (b1 * b1), 0.0)
+    g = jnp.zeros_like(u).at[hidx].set(g_head).at[lidx].set(g_leaf)
+    return t + jnp.float32(spec.const), g

@@ -386,10 +386,45 @@ def lda(V: int = 100, K: int = 5, D: int = 10, avg_len: int = 1_000,
                       data={"doc_ids": doc_ids, "words": words})
 
 
+# ---------------------------------------------------------------------------
+# Eight schools (Rubin 1981) — the canonical conditionally-separable
+# hierarchy: (mu, tau) couple every theta_i, but GIVEN (mu, tau) the
+# thetas are independent Normals with Normal likelihood attached. Not a
+# Table-1 model; it exercises the conditional potential-spec path.
+# ---------------------------------------------------------------------------
+def eight_schools() -> PaperModel:
+    y = np.asarray([28., 8., -3., 7., -1., 1., 18., 12.], dtype=np.float32)
+    sigma = np.asarray([15., 10., 16., 11., 9., 11., 10., 18.],
+                       dtype=np.float32)
+
+    @model
+    def schools(y, sigma):
+        mu = sample("mu", Normal(0.0, 5.0))
+        tau = sample("tau", HalfNormal(5.0))
+        theta = sample("theta", Normal(mu * jnp.ones(8), tau))
+        observe("y", Normal(theta, sigma), y)
+
+    yj, sj = jnp.asarray(y), jnp.asarray(sigma)
+
+    def handwritten(q):  # layout: mu, u_tau = log tau, theta[0:8]
+        mu, u_tau, theta = q[0], q[1], q[2:10]
+        tau = jnp.exp(u_tau)
+        lp = _norm_lp(mu, 0.0, 5.0)
+        lp += (0.5 * math.log(2.0 / math.pi) - math.log(5.0)
+               - 0.5 * (tau / 5.0) ** 2 + u_tau)
+        lp += jnp.sum(_norm_lp(theta, mu, tau))
+        lp += jnp.sum(_norm_lp(yj, theta, sj))
+        return lp
+
+    return PaperModel("eight_schools", schools(yj, sj), handwritten,
+                      step_size=0.1, data={"y": y, "sigma": sigma})
+
+
 MODEL_NAMES = ("gaussian_10k", "gauss_unknown", "naive_bayes", "logreg",
                "hier_poisson", "sto_volatility", "hmm_semisup", "lda")
 
 _BUILDERS = {
+    "eight_schools": eight_schools,
     "gaussian_10k": gaussian_10k,
     "gauss_unknown": gauss_unknown,
     "naive_bayes": naive_bayes,

@@ -1,0 +1,359 @@
+"""Static-analysis subsystem: graph IR, lint passes, coverage, cond specs.
+
+Covers the analysis tentpole end to end:
+
+* graph structure — nodes/edges/layout slices on eight schools, the
+  coupled head vs separable-leaf split, dynamic-structure detection.
+* lint passes — four purpose-built bad models (duplicate varname,
+  discrete parameter under HMC, out-of-support observation,
+  RV-dependent Python branch) each trigger their dedicated lint naming
+  the offending site; the paper suite stays clean.
+* conditional potential specs — eight schools compiles to
+  ``CondPotentialSpec``, value/grad parity against the reference
+  log-density, and fused-vs-reference HMC draw parity.
+* coverage report — the fused_logpdf column agrees with the block
+  families ``FusedEvaluator`` actually gathers at runtime.
+* samplers — discrete parameter sites fail fast in HMC/NUTS/ADVI with
+  the site named; separability failures surface as ``spec_reason``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import model, observe, sample
+from repro.analysis import (analyze_model, build_analysis_report,
+                            build_model_graph, fusion_coverage, run_lints,
+                            validate_analysis_report)
+from repro.core.potential import compile_potential
+from repro.core.varinfo import typify
+from repro.dists import (Beta, Categorical, Gamma, HalfNormal, Normal,
+                         Uniform)
+from repro.infer import ADVI, HMC, NUTS
+from repro.infer.chains import setup_chain_driver
+from repro.kernels.fused_leapfrog import (CondPotentialSpec, fused_leapfrog,
+                                          potential_value_and_grad)
+from repro.models import paper_suite
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _schools():
+    return paper_suite.build("eight_schools").model
+
+
+def _graph(m, key=KEY):
+    tvi = typify(m.untyped_trace(key))
+    return build_model_graph(m, tvi), tvi
+
+
+# ---------------------------------------------------------------------------
+# graph IR
+# ---------------------------------------------------------------------------
+def test_graph_structure_eight_schools():
+    g, tvi = _graph(_schools())
+    assert not g.dynamic
+    names = [n.name for n in g.nodes]
+    assert names == ["mu", "tau", "theta", "y"]
+    assert g.node("theta").deps == ("mu", "tau")
+    assert g.node("y").deps == ("theta",)
+    assert set(g.head_syms()) == {"mu", "tau"}
+    th = g.node("theta")
+    assert th.unc_size == 8
+    sl = slice(th.unc_offset, th.unc_offset + th.unc_size)
+    assert np.allclose(tvi.flat()[sl], np.ravel(tvi["theta"]))
+
+
+def test_graph_field_level_deps():
+    g, _ = _graph(_schools())
+    th = g.node("theta")
+    assert g.node("y").field_dep("loc") == ("theta",)
+    assert th.field_dep("loc") == ("mu",)
+    assert th.field_dep("scale") == ("tau",)
+
+
+def test_graph_coupling_edge_and_separable():
+    @model
+    def sep():
+        sample("a", Normal(jnp.zeros(4), 1.0))
+        sample("g", Gamma(2.0, 1.0))
+
+    g, _ = _graph(sep())
+    assert g.coupling_edge() is None
+
+    g2, _ = _graph(_schools())
+    assert g2.coupling_edge() is not None
+
+
+# ---------------------------------------------------------------------------
+# lint passes: one purpose-built bad model per dedicated lint
+# ---------------------------------------------------------------------------
+def _findings_for(m):
+    try:
+        tvi = typify(m.untyped_trace(KEY))
+    except Exception:
+        tvi = None
+    return run_lints(build_model_graph(m, tvi))
+
+
+def _one(findings, pass_id):
+    hits = [f for f in findings if f.pass_id == pass_id]
+    assert hits, f"expected a {pass_id} finding in {findings}"
+    return hits[0]
+
+
+def test_lint_duplicate_varname():
+    @model
+    def dup():
+        a = sample("x", Normal(0.0, 1.0))
+        b = sample("x", Normal(0.0, 1.0))
+        observe("y", Normal(a + b, 1.0), 0.3)
+
+    f = _one(_findings_for(dup()), "duplicate-site")
+    assert f.severity == "error" and f.site == "x"
+
+
+def test_lint_discrete_param():
+    @model
+    def disc():
+        z = sample("z", Categorical(logits=jnp.zeros(3)))
+        observe("y", Normal(jnp.asarray([0.0, 1.0, 2.0])[z], 1.0), 0.5)
+
+    f = _one(_findings_for(disc()), "discrete-param")
+    assert f.severity == "error" and f.site == "z"
+
+
+def test_lint_observed_out_of_support():
+    @model
+    def bad_obs():
+        p = sample("p", Beta(2.0, 2.0))
+        observe("y", Beta(2.0, 2.0), 1.7)  # Beta support is (0, 1)
+
+    f = _one(_findings_for(bad_obs()), "observed-support")
+    assert f.severity == "error" and f.site == "y"
+
+
+def test_lint_rv_dependent_branch():
+    @model
+    def branchy():
+        x = sample("x", Normal(0.0, 1.0))
+        if x > 0:  # Python control flow on a random variable
+            observe("y", Normal(x, 1.0), 0.2)
+        else:
+            observe("y", Normal(-x, 1.0), 0.2)
+
+    f = _one(_findings_for(branchy()), "dynamic-structure")
+    assert f.severity == "error"
+
+
+def test_lint_unused_site_warning():
+    @model
+    def orphan():
+        a = sample("a", Normal(0.0, 1.0))
+        sample("b", Normal(0.0, 1.0))  # never reaches the data
+        observe("y", Normal(a, 1.0), 0.1)
+
+    f = _one(_findings_for(orphan()), "unused-site")
+    assert f.severity == "warning" and f.site == "b"
+
+
+def test_paper_suite_small_sizes_lint_clean():
+    small = [paper_suite.build("gauss_unknown", n=200).model,
+             paper_suite.build("hier_poisson").model,
+             paper_suite.build("eight_schools").model]
+    for m in small:
+        errs = [f for f in _findings_for(m) if f.severity == "error"]
+        assert errs == [], f"{m.name}: {errs}"
+
+
+# ---------------------------------------------------------------------------
+# separability verdicts + conditional spec parity
+# ---------------------------------------------------------------------------
+def test_verdict_separable():
+    @model
+    def sep():
+        sample("a", Normal(jnp.zeros(4), 1.0))
+        sample("g", Gamma(2.0, 1.0))
+
+    m = sep()
+    tvi = m.typed_varinfo(KEY).link()
+    res = compile_potential(m, tvi)
+    assert res.kind == "separable" and res.spec is not None
+    assert res.reason is None
+
+
+def test_verdict_conditional_eight_schools():
+    m = _schools()
+    tvi = m.typed_varinfo(KEY).link()
+    res = compile_potential(m, tvi)
+    assert res.kind == "conditional"
+    assert isinstance(res.spec, CondPotentialSpec)
+    assert set(res.spec.head_syms) == {"mu", "tau"}
+
+
+def test_verdict_none_records_reason_and_site():
+    @model
+    def scale_coupled():
+        s = sample("s", HalfNormal(1.0))
+        observe("y", Normal(jnp.zeros(4), s), 0.1 * jnp.ones(4))
+
+    m = scale_coupled()
+    tvi = m.typed_varinfo(KEY).link()
+    res = compile_potential(m, tvi)
+    assert res.spec is None and res.kind is None
+    assert res.reason is not None and "'y'" in res.reason
+
+
+def test_cond_spec_value_and_grad_parity():
+    m = _schools()
+    tvi = m.typed_varinfo(KEY).link()
+    spec = compile_potential(m, tvi).spec
+    ld = m.make_logdensity_fn(tvi, backend="fused")
+    vg = jax.jit(jax.value_and_grad(ld))
+    for i in range(3):
+        u = tvi.flat() + 0.5 * jax.random.normal(
+            jax.random.fold_in(KEY, i), tvi.flat().shape)
+        v, g = potential_value_and_grad(spec, u)
+        vr, gr = vg(u)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(vr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_cond_leapfrog_matches_autodiff_trajectory():
+    m = _schools()
+    tvi = m.typed_varinfo(KEY).link()
+    spec = compile_potential(m, tvi).spec
+    ld = m.make_logdensity_fn(tvi, backend="fused")
+    vg = jax.value_and_grad(ld)
+    q = tvi.flat()
+    p = jax.random.normal(jax.random.fold_in(KEY, 7), q.shape)
+    eps, n_steps = 0.1, 8
+
+    _, g0 = vg(q)
+    qf, pf, _, _ = fused_leapfrog(spec, q, p, g0, eps, n_steps)
+
+    # hand-rolled reference leapfrog over autodiff
+    qr, pr, gr = q, p, g0
+    for _ in range(n_steps):
+        pr = pr + 0.5 * eps * gr
+        qr = qr + eps * pr
+        _, gr = vg(qr)
+        pr = pr + 0.5 * eps * gr
+    np.testing.assert_allclose(np.asarray(qf), np.asarray(qr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(pr), atol=1e-5)
+
+
+def test_hmc_fused_vs_reference_draws_eight_schools():
+    m = _schools()
+    chf = HMC(step_size=0.1, n_leapfrog=4, leapfrog="fused").run(
+        KEY, m, 10)
+    chr_ = HMC(step_size=0.1, n_leapfrog=4, leapfrog="reference").run(
+        KEY, m, 10)
+    for k in ("mu", "tau", "theta"):
+        np.testing.assert_allclose(np.asarray(chf.draws[k]),
+                                   np.asarray(chr_.draws[k]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# coverage report consistency with the runtime fused evaluator
+# ---------------------------------------------------------------------------
+def test_coverage_matches_fused_evaluator_blocks():
+    from repro.core.interpreters import FusedEvaluator
+
+    @model
+    def mix(y):
+        sample("n", Normal(jnp.zeros(8), 2.0))
+        sample("g", Gamma(2.0 * jnp.ones(5), 1.5))
+        sample("u", Uniform(-1.0, 2.0))  # no fused_logpdf family
+        observe("y", Normal(jnp.zeros(4), 1.0), y)
+
+    m = mix(0.1 * jnp.ones(4))
+    g, tvi = _graph(m)
+    cov = fusion_coverage(m, g, tvi)
+
+    ev = FusedEvaluator(tvi, None)
+    m._run(ev)
+    runtime = sorted(fam for (fam, _, _), segs in ev._site_blocks.items()
+                     for _ in segs)
+    reported = sorted(s.fused_family for s in cov.sites
+                      if s.fused_family is not None)
+    assert reported == runtime
+    assert cov.site("u").fused_family is None
+    assert "Uniform" in cov.site("u").fused_reason
+
+
+def test_coverage_roles_eight_schools():
+    m = _schools()
+    g, tvi = _graph(m)
+    cov = fusion_coverage(m, g, tvi)
+    assert cov.potential_kind == "conditional"
+    assert cov.site("mu").leapfrog_role == "head"
+    assert cov.site("tau").leapfrog_role == "head"
+    assert cov.site("theta").leapfrog_role == "leaf"
+    assert cov.site("theta").leapfrog_op == "NORMAL"
+
+
+# ---------------------------------------------------------------------------
+# Model.analyze + report schema
+# ---------------------------------------------------------------------------
+def test_model_analyze_roundtrip():
+    a = _schools().analyze()
+    assert a.ok and a.findings == []
+    assert a.coverage.potential_kind == "conditional"
+    text = a.render()
+    assert "conditional" in text and "theta" in text
+    report = build_analysis_report([a])
+    assert validate_analysis_report(report) == []
+
+
+def test_analyze_model_reports_errors():
+    @model
+    def disc():
+        z = sample("z", Categorical(logits=jnp.zeros(3)))
+        observe("y", Normal(jnp.asarray([0.0, 1.0, 2.0])[z], 1.0), 0.5)
+
+    a = analyze_model(disc())
+    assert not a.ok
+    assert any(f.pass_id == "discrete-param" for f in a.errors())
+
+
+# ---------------------------------------------------------------------------
+# samplers: fail fast on discrete sites, surface spec_reason
+# ---------------------------------------------------------------------------
+def _discrete_model():
+    @model
+    def disc():
+        z = sample("z", Categorical(logits=jnp.zeros(3)))
+        observe("y", Normal(jnp.asarray([0.0, 1.0, 2.0])[z], 1.0), 0.5)
+
+    return disc()
+
+
+@pytest.mark.parametrize("runner", [
+    lambda m: HMC().run(KEY, m, 2),
+    lambda m: NUTS().run(KEY, m, 2, num_warmup=1),
+    lambda m: ADVI(num_steps=2).run(KEY, m),
+], ids=["hmc", "nuts", "advi"])
+def test_discrete_param_fails_fast(runner):
+    with pytest.raises(ValueError, match="'z'"):
+        runner(_discrete_model())
+
+
+def test_spec_reason_surfaced_on_kernel():
+    @model
+    def scale_coupled():
+        s = sample("s", HalfNormal(1.0))
+        observe("y", Normal(jnp.zeros(4), s), 0.1 * jnp.ones(4))
+
+    m = scale_coupled()
+    _, kern, _, _, _ = setup_chain_driver(KEY, m, HMC(step_size=0.05),
+                                          num_chains=1)
+    assert kern.spec_reason is not None and "'y'" in kern.spec_reason
+
+
+def test_spec_reason_absent_when_fused():
+    _, kern, _, _, _ = setup_chain_driver(KEY, _schools(),
+                                          HMC(step_size=0.1), num_chains=1)
+    assert kern.spec_reason is None

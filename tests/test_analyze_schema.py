@@ -1,0 +1,101 @@
+"""Analysis JSON schema + `python -m repro.analyze` CLI smoke.
+
+Mirror of ``test_bench_schema.py`` for the analysis reports: the
+validator's accept/reject behaviour, a full build/write/read roundtrip
+through the CLI, file discovery, and the exit-status contract (0 clean,
+1 on any error-severity finding) that the CI analyze job gates on.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.report import (ANALYSIS_SCHEMA_VERSION,
+                                   validate_analysis_report)
+
+
+def _good_report():
+    return {
+        "schema_version": ANALYSIS_SCHEMA_VERSION,
+        "kind": "analysis",
+        "machine": {"platform": "x", "python": "3.10"},
+        "models": [{
+            "name": "m", "dynamic": False,
+            "findings": [{"pass": "unused-site", "severity": "warning",
+                          "site": "b", "message": "..."}],
+            "potential": {"kind": "separable", "reason": None, "site": None},
+            "sites": [{"name": "a", "kind": "param", "dist": "Normal",
+                       "fused_family": "std_normal", "fused_reason": None,
+                       "leapfrog_op": "NORMAL",
+                       "leapfrog_role": "separable",
+                       "leapfrog_reason": None}],
+            "n_errors": 0, "n_warnings": 1,
+        }],
+    }
+
+
+def test_valid_report_passes():
+    assert validate_analysis_report(_good_report()) == []
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda r: r.update(schema_version=99), "schema_version"),
+    (lambda r: r.update(kind="bench"), "kind"),
+    (lambda r: r.pop("machine"), "machine"),
+    (lambda r: r.update(models="nope"), "models"),
+    (lambda r: r["models"][0].pop("name"), "name"),
+    (lambda r: r["models"][0].update(n_errors=3), "n_errors"),
+    (lambda r: r["models"][0]["findings"][0].update(severity="fatal"),
+     "severity"),
+], ids=["version", "kind", "machine", "models", "model-name",
+        "error-count-mismatch", "bad-severity"])
+def test_invalid_reports_rejected(mutate, needle):
+    r = _good_report()
+    mutate(r)
+    errs = validate_analysis_report(r)
+    assert errs and any(needle in e for e in errs)
+
+
+def _run_cli(args, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analyze", *args],
+        capture_output=True, text=True, cwd=cwd)
+
+
+def test_cli_clean_model_exits_zero(tmp_path):
+    out = tmp_path / "analysis.json"
+    r = _run_cli(["--models", "gauss_unknown", "--quiet",
+                  "--json", str(out)])
+    assert r.returncode == 0, r.stderr
+    report = json.loads(out.read_text())
+    assert validate_analysis_report(report) == []
+    assert report["models"][0]["name"] == "gauss_unknown"
+    assert report["models"][0]["n_errors"] == 0
+
+
+def test_cli_discovers_files_and_fails_on_errors(tmp_path):
+    bad = tmp_path / "bad_model.py"
+    bad.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        from repro import model, observe, sample
+        from repro.dists import Categorical, Normal
+
+        @model
+        def disc():
+            z = sample("z", Categorical(logits=jnp.zeros(3)))
+            observe("y", Normal(jnp.asarray([0., 1., 2.])[z], 1.0), 0.5)
+
+        bound = disc()
+    """))
+    r = _run_cli(["--files", str(bad)])
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "discrete-param" in r.stdout
+
+
+def test_cli_render_names_sites():
+    r = _run_cli(["--models", "eight_schools"])
+    assert r.returncode == 0, r.stderr
+    assert "conditional" in r.stdout
+    assert "theta" in r.stdout and "NORMAL (leaf)" in r.stdout

@@ -23,7 +23,8 @@ from repro.dists import (Beta, Cauchy, Exponential, Gamma, HalfNormal,
                          LogNormal, Normal, StudentT, Uniform)
 from repro.infer.hmc import HMC, _leapfrog, hmc_transition
 from repro.infer.nuts import NUTS
-from repro.kernels.fused_leapfrog import (OP_EXP, OP_NORMAL, fused_leapfrog,
+from repro.kernels.fused_leapfrog import (CondPotentialSpec, OP_EXP,
+                                          OP_NORMAL, fused_leapfrog,
                                           potential_value_and_grad)
 
 TOL = 1e-5
@@ -78,6 +79,8 @@ def test_spec_uniform_op_specialisation():
 
 
 def test_spec_none_on_nonseparable():
+    # scale (not location) coupling: no attach form exists, so neither
+    # the separable nor the conditional compiler accepts it
     @model
     def hier():
         s = sample("s", HalfNormal(1.0))
@@ -86,13 +89,16 @@ def test_spec_none_on_nonseparable():
     _, _, spec = _spec_and_ld(hier())
     assert spec is None
 
+    # location coupling between params IS conditionally separable now:
+    # mu becomes the coupled head, x the analytic leaf block
     @model
     def chained():
         mu = sample("mu", Normal(0.0, 1.0))
         sample("x", Normal(mu * jnp.ones(3), 1.0))  # param depends on param
 
     _, _, spec2 = _spec_and_ld(chained())
-    assert spec2 is None
+    assert isinstance(spec2, CondPotentialSpec)
+    assert spec2.head_syms == ("mu",)
 
 
 def test_potential_value_and_grad_matches_reference():
