@@ -1,0 +1,170 @@
+"""Compiled vs eager probability queries — wall clock + cache economics.
+
+The headline measurement for the query-program tentpole: a
+posterior-predictive ``prob`` over M=1000 stacked draws evaluated as
+
+  * ``ppd_compiled``  — ONE cached program: ``jit(vmap)`` over the
+    (M, num_flat) stacked flat buffer (1 cache miss total, every
+    further call a hit), vs
+  * ``ppd_loop``      — the pre-tentpole shape: a Python loop calling
+    the eager per-draw likelihood M times (O(M) traces/dispatches).
+
+plus the scalar query kinds (likelihood / prior / joint) compiled vs
+eager, and the program-cache hit rate over repeated heterogeneous
+calls. Speedup and parity land under ``extra``.
+
+``python -m benchmarks.queries_bench [--json PATH]`` writes the
+schema-valid report (``BENCH_queries.json`` at the repo root is the
+committed baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+SEED = 0
+WARMUP = 2
+REPEATS = 5
+NUM_DRAWS = 1000
+LOOP_DRAWS = 1000
+
+
+def _setup():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import model, observe, sample
+    from repro.dists import InverseGamma, MvNormalDiag, Normal
+
+    @model
+    def linreg(X, y):
+        w = sample("w", MvNormalDiag(jnp.zeros(3), jnp.ones(3)))
+        s = sample("s", InverseGamma(2.0, 3.0))
+        observe("y", Normal(X @ w, jnp.sqrt(s)), y)
+
+    rng = np.random.default_rng(SEED)
+    X = rng.normal(size=(16, 3)).astype(np.float32)
+    y = rng.normal(size=(16,)).astype(np.float32)
+    chain = {"w": rng.normal(size=(NUM_DRAWS, 3)).astype(np.float32),
+             "s": np.exp(rng.normal(size=NUM_DRAWS)).astype(np.float32)}
+    return linreg, X, y, chain
+
+
+def _time(fn, *, n: int = 1, trials: int = REPEATS,
+          warmup: int = WARMUP) -> float:
+    """Best-of-``trials`` mean per-call seconds."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best
+
+
+def _entries() -> List[Dict]:
+    import numpy as np
+
+    from benchmarks.bench_io import entry
+    from repro.core.program import ProgramCache
+    from repro.core.queries import prob
+
+    linreg, X, y, chain = _setup()
+    ppd_spec = "X = Xn, y = yn | chain = c, model = m"
+
+    # -- posterior predictive: ONE cached vmapped program ----------------
+    cache = ProgramCache()
+    lp_compiled = prob(ppd_spec, cache=cache,
+                       Xn=X, yn=y, c=chain, m=linreg)
+    s = cache.stats()
+    programs_compiled, hits_after_first = s["misses"], s["hits"]
+    t_compiled = _time(lambda: prob(ppd_spec, cache=cache,
+                                    Xn=X, yn=y, c=chain, m=linreg), n=5)
+    hit_stats = cache.stats()
+
+    # -- the pre-tentpole shape: Python loop, one eager eval per draw ----
+    m = linreg(X, y)
+
+    def ppd_loop():
+        lls = [float(m.loglikelihood({"w": chain["w"][i],
+                                      "s": chain["s"][i]}))
+               for i in range(LOOP_DRAWS)]
+        lls = np.asarray(lls)
+        mx = lls.max()
+        return mx + np.log(np.exp(lls - mx).sum()) - np.log(LOOP_DRAWS)
+
+    t0 = time.perf_counter()
+    lp_loop = ppd_loop()  # one call: the loop IS the cost being measured
+    t_loop = time.perf_counter() - t0
+
+    parity = abs(float(lp_compiled) - float(lp_loop))
+    yield entry("ppd_compiled", t_compiled * 1e6,
+                num_draws=NUM_DRAWS,
+                programs_compiled=programs_compiled,
+                cache_hits=hit_stats["hits"],
+                cache_hit_rate=(hit_stats["hits"]
+                                / max(1, hit_stats["hits"]
+                                      + hit_stats["misses"])),
+                speedup_vs_loop=t_loop / t_compiled,
+                parity_abs_err=parity)
+    yield entry("ppd_loop", t_loop * 1e6, num_draws=LOOP_DRAWS,
+                note="per-draw eager loop (pre-tentpole O(M) path)")
+
+    # -- scalar kinds: compiled (cached program) vs eager re-execution ---
+    w0 = np.asarray([0.5, -0.25, 0.1], np.float32)
+    kinds = {
+        "likelihood": ("X = Xn, y = yn | w = w0, s = 1.0, model = m",
+                       dict(Xn=X, yn=y, w0=w0, m=linreg)),
+        "prior": ("w = w0, s = 1.0 | X = Xn, y = yn, model = m",
+                  dict(Xn=X, yn=y, w0=w0, m=linreg)),
+        "joint": ("X = Xn, y = yn, w = w0, s = 1.0 | model = m",
+                  dict(Xn=X, yn=y, w0=w0, m=linreg)),
+    }
+    for kind, (spec, bindings) in kinds.items():
+        t_c = _time(lambda: prob(spec, cache=cache, **bindings), n=20)
+        t_e = _time(lambda: prob(spec, compiled=False, **bindings), n=3)
+        err = abs(float(prob(spec, cache=cache, **bindings))
+                  - float(prob(spec, compiled=False, **bindings)))
+        yield entry(f"{kind}_compiled", t_c * 1e6,
+                    speedup_vs_eager=t_e / t_c, parity_abs_err=err)
+        yield entry(f"{kind}_eager", t_e * 1e6)
+
+
+def run():
+    """CSV-ish section lines for ``benchmarks.run``."""
+    for e in _entries():
+        extra = ";".join(f"{k}={v:.3g}" if isinstance(v, float)
+                         else f"{k}={v}"
+                         for k, v in sorted(e["extra"].items()))
+        yield f"queries/{e['name']},{e['us_per_call']:.1f},{extra}"
+
+
+def report() -> Dict:
+    from benchmarks.bench_io import make_report
+    return make_report("queries", list(_entries()), seed=SEED,
+                       warmup=WARMUP, repeats=REPEATS,
+                       num_draws=NUM_DRAWS, loop_draws=LOOP_DRAWS)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--json", default=None, metavar="PATH")
+    args = p.parse_args(argv)
+    for line in run():
+        print(line, flush=True)
+    if args.json:
+        from benchmarks.bench_io import write_report
+        write_report(report(), args.json)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,9 @@
                     ``--chains N``; also runnable via --only multichain)
   resume          — segmented (checkpointable) driver vs the single-scan
                     driver: end-to-end overhead per run_chains call
+  queries         — compiled (cached-program) vs eager probability
+                    queries; posterior predictive as one jit(vmap) vs
+                    the per-draw loop
 
 ``python -m benchmarks.run [--fast] [--only SECTION] [--chains N]
 [--json-dir DIR]`` (--fast cuts table1 to 200 iterations for quick
@@ -52,7 +55,8 @@ def main(argv=None) -> int:
     p.add_argument("--fast", action="store_true")
     p.add_argument("--only", default=None,
                    choices=("table1", "typed_ablation", "kernels",
-                            "leapfrog", "roofline", "multichain", "resume"))
+                            "leapfrog", "roofline", "multichain", "resume",
+                            "queries"))
     p.add_argument("--json-dir", default=None, metavar="DIR",
                    help="also write BENCH_*.json reports into DIR")
     p.add_argument("--chains", type=int, default=None, metavar="N",
@@ -77,6 +81,9 @@ def main(argv=None) -> int:
         from benchmarks import resume_bench
         sections.append(
             ("resume", lambda: resume_bench.run(fast=args.fast)))
+    if args.only in (None, "queries"):
+        from benchmarks import queries_bench
+        sections.append(("queries", queries_bench.run))
     if args.only == "multichain" or args.chains is not None:
         n = args.chains if args.chains is not None else 4
         sections.append(
@@ -114,6 +121,9 @@ def main(argv=None) -> int:
             reporters.append(
                 ("BENCH_resume.json",
                  lambda: resume_bench.report(fast=args.fast)))
+        if args.only in (None, "queries"):
+            from benchmarks import queries_bench
+            reporters.append(("BENCH_queries.json", queries_bench.report))
         for fname, reporter in reporters:
             path = os.path.join(args.json_dir, fname)
             try:

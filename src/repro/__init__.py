@@ -5,9 +5,10 @@ Probabilistic Models" (Tarek et al., 2020) as a JAX/TPU framework.
 """
 from repro.core import (DefaultContext, LikelihoodContext, MiniBatchContext,
                         Model, ModelGen, PriorContext, TypedVarInfo,
-                        UntypedVarInfo, deterministic, factor, missing, model,
-                        observe, prior_factor, reject, reject_if, sample,
-                        submodel, tilde, typify)
+                        UntypedVarInfo, cache_stats, deterministic, factor,
+                        missing, model, observe, prior_factor, prob,
+                        program_cache, reject, reject_if, sample, submodel,
+                        tilde, typify)
 
 __version__ = "1.0.0"
 
@@ -16,5 +17,6 @@ __all__ = [
     "deterministic", "factor", "prior_factor", "submodel", "reject", "reject_if", "typify",
     "UntypedVarInfo", "TypedVarInfo",
     "DefaultContext", "LikelihoodContext", "PriorContext", "MiniBatchContext",
+    "prob", "program_cache", "cache_stats",
     "__version__",
 ]

@@ -23,7 +23,8 @@ from repro.analysis.graph import ModelGraph
 from repro.core.model import Model
 from repro.core.varinfo import TypedVarInfo
 
-__all__ = ["SiteCoverage", "CoverageReport", "fusion_coverage", "OP_NAMES"]
+__all__ = ["SiteCoverage", "QueryCoverage", "CoverageReport",
+           "fusion_coverage", "OP_NAMES"]
 
 OP_NAMES = {0: "ZERO", 1: "NORMAL", 2: "EXP", 3: "SOFTPLUS", 4: "TLOG"}
 
@@ -42,6 +43,15 @@ class SiteCoverage:
     leapfrog_reason: Optional[str]     # why not, when op/role is None
 
 
+@dataclasses.dataclass(frozen=True)
+class QueryCoverage:
+    """Per-query-kind lowering verdict: compiled program or eager trace."""
+
+    kind: str                          # "prior" | "likelihood" | "joint" | ...
+    path: str                          # "compiled" | "eager"
+    reason: Optional[str]              # why eager, when path == "eager"
+
+
 @dataclasses.dataclass
 class CoverageReport:
     """Model-level fusion coverage: per-site table + compile verdict."""
@@ -51,6 +61,7 @@ class CoverageReport:
     potential_reason: Optional[str]
     potential_site: Optional[str]
     sites: Tuple[SiteCoverage, ...]
+    queries: Tuple[QueryCoverage, ...] = ()
 
     def site(self, name: str) -> SiteCoverage:
         for s in self.sites:
@@ -98,13 +109,13 @@ def fusion_coverage(model: Model, graph: ModelGraph,
     the per-site columns but the model-level potential verdict requires
     a linkable trace (discrete sites report the link failure instead).
     """
-    from repro.core.potential import compile_potential
+    from repro.core.program import cached_potential
 
     kind = reason = vsite = None
     spec = None
     if tvi is not None:
         try:
-            res = compile_potential(model, tvi.link())
+            res = cached_potential(model, tvi.link())
             kind, reason, vsite, spec = (res.kind, res.reason, res.site,
                                          res.spec)
         except ValueError as e:  # link() refuses discrete sites
@@ -158,6 +169,18 @@ def fusion_coverage(model: Model, graph: ModelGraph,
                 leapfrog_op=None, leapfrog_role=None,
                 leapfrog_reason="data terms fold into the spec const "
                                 "or attach/residual"))
+    # Per-query-kind lowering verdict: every `prob` query kind lowers to one
+    # cached jitted program over the flat buffer unless the model's trace
+    # structure is value-dependent, in which case queries fall back to the
+    # eager per-call trace.
+    if graph.dynamic:
+        q_path, q_reason = "eager", graph.dynamic_reason
+    else:
+        q_path, q_reason = "compiled", None
+    queries = tuple(
+        QueryCoverage(kind=k, path=q_path, reason=q_reason)
+        for k in ("prior", "likelihood", "joint", "posterior_predictive"))
+
     return CoverageReport(model=model.name, potential_kind=kind,
                           potential_reason=reason, potential_site=vsite,
-                          sites=tuple(sites))
+                          sites=tuple(sites), queries=queries)

@@ -93,6 +93,8 @@ class ModelAnalysis:
                           "reason": self.coverage.potential_reason,
                           "site": self.coverage.potential_site},
             "sites": sites,
+            "queries": [{"kind": q.kind, "path": q.path, "reason": q.reason}
+                        for q in getattr(self.coverage, "queries", ())],
             "n_errors": len(self.errors()),
             "n_warnings": len(self.warnings()),
         }
@@ -116,6 +118,14 @@ class ModelAnalysis:
                 lines.append(f"    {f}")
         else:
             lines.append("  findings: none")
+        if cov.queries:
+            qbits = []
+            for q in cov.queries:
+                cell = f"{q.kind}={q.path}"
+                if q.path == "eager" and q.reason:
+                    cell += f" ({q.reason})"
+                qbits.append(cell)
+            lines.append("  queries: " + ", ".join(qbits))
         rows = [("site", "kind", "dist", "fused_logpdf", "fused_leapfrog")]
         for s in cov.sites:
             fam = s.fused_family or f"— ({s.fused_reason})"
@@ -154,7 +164,14 @@ def analyze_model(model, key=None, tvi=None) -> ModelAnalysis:
             tvi = None  # graph builder re-traces and reports why
     if tvi is not None and tvi.linked:
         tvi = tvi.invlink()
-    graph = build_model_graph(model, tvi)
+    # Route through the program cache: if sampling (or a previous analyze)
+    # already built the graph for this model+layout, replay it instead of
+    # forcing a fresh abstract trace.
+    if tvi is not None:
+        from repro.core.program import model_graph
+        graph = model_graph(model, tvi)
+    else:
+        graph = build_model_graph(model, tvi)
     findings = run_lints(graph)
     coverage = fusion_coverage(model, graph, tvi)
     return ModelAnalysis(model=model, graph=graph, findings=findings,
@@ -218,6 +235,19 @@ def validate_analysis_report(report: dict) -> List[str]:
                 if not isinstance(s.get(k), typ):
                     errs.append(f"{tag}.sites[{j}].{k} missing/not "
                                 f"{typ.__name__}")
+        # optional (older reports predate it) but validated when present
+        queries = m.get("queries")
+        if queries is not None:
+            if not isinstance(queries, list):
+                errs.append(f"{tag}.queries is not a list")
+            else:
+                for j, q in enumerate(queries):
+                    if not isinstance(q, dict) or not isinstance(
+                            q.get("kind"), str):
+                        errs.append(f"{tag}.queries[{j}].kind missing")
+                        continue
+                    if q.get("path") not in ("compiled", "eager"):
+                        errs.append(f"{tag}.queries[{j}].path invalid")
         n_err = sum(1 for f in (m.get("findings") or [])
                     if isinstance(f, dict) and f.get("severity") == "error")
         if isinstance(m.get("n_errors"), int) and m["n_errors"] != n_err:

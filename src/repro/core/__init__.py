@@ -7,6 +7,9 @@ from repro.core.model import Model, ModelGen, model
 from repro.core.primitives import (deterministic, factor, get_logp, missing,
                                    observe, prior_factor, reject, reject_if,
                                    sample, set_logp, submodel, tilde)
+from repro.core.program import (CompiledProgram, ProgramCache, ProgramKey,
+                                cache_stats, clear_cache, program_cache)
+from repro.core.queries import parse_query, prepare_query, prob
 from repro.core.varinfo import SiteMeta, TypedVarInfo, UntypedVarInfo, typify
 from repro.core.varname import VarName
 
@@ -19,4 +22,7 @@ __all__ = [
     "MiniBatchContext",
     "UntypedVarInfo", "TypedVarInfo", "typify", "SiteMeta", "VarName",
     "Sampler", "Evaluator", "LinkedEvaluator", "EarlyRejectError",
+    "CompiledProgram", "ProgramCache", "ProgramKey",
+    "program_cache", "cache_stats", "clear_cache",
+    "prob", "parse_query", "prepare_query",
 ]

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import itertools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -39,11 +40,17 @@ __all__ = ["model", "Model", "ModelGen"]
 class ModelGen:
     """The model constructor produced by ``@model`` (paper's ModelGen)."""
 
+    _uid_counter = itertools.count()
+
     def __init__(self, fn: Callable):
         self.fn = fn
         self.name = fn.__name__
         self.signature = inspect.signature(fn)
         self.arg_names = tuple(self.signature.parameters)
+        # process-monotonic identity for ProgramCache keys: unlike id(),
+        # never reused after garbage collection, so a new generator can
+        # never alias a dead one's compiled programs
+        self._uid = next(ModelGen._uid_counter)
         functools.update_wrapper(self, fn)
 
     def __call__(self, *args, **kwargs) -> "Model":

@@ -692,8 +692,11 @@ def compile_potential(model: Model, tvi_linked: TypedVarInfo,
     """
     graph, graph_reason = None, None
     try:
-        from repro.analysis.graph import build_model_graph
-        graph = build_model_graph(model, tvi_linked, ctx=ctx)
+        # routed through the ProgramCache: Model.analyze() and repeated
+        # sampler setups on the same (model, layout, ctx) share ONE graph
+        # build — the graph's own replay probes are the expensive part
+        from repro.core.program import model_graph
+        graph = model_graph(model, tvi_linked, ctx=ctx)
     except Exception as e:  # graph failure: fall through to probing
         graph_reason = f"dependency-graph construction failed: {e}"
     if graph is not None and graph.dynamic:

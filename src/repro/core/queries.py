@@ -5,10 +5,13 @@ Julia's string macro becomes a parsed query string plus keyword bindings:
     prob("X = Xnew, y = ynew | w = w0, s = 1.0, model = linreg",
          Xnew=..., ynew=..., w0=..., linreg=linreg_gen)
 
-Grammar:  ``lhs | rhs`` where each side is ``name = expr, ...``.
-``expr`` is evaluated against the keyword bindings (plus numpy/jnp).
-``rhs`` must bind ``model``; it may bind ``chain`` (posterior samples:
-a dict of name -> (M, ...) stacked draws) for posterior-predictive queries.
+Grammar:  ``lhs | rhs`` where each side is ``name = expr, ...`` (a bare
+``name`` binds the keyword of the same name). ``expr`` is evaluated by a
+restricted AST interpreter — names from the keyword bindings, literals,
+containers, arithmetic, and attribute access / calls on ``np``/``jnp``
+only; no builtins, no arbitrary callables. ``rhs`` must bind ``model``;
+it may bind ``chain`` (posterior samples: a dict of name -> (M, ...)
+stacked draws) for posterior-predictive queries.
 
 Semantics (matching the paper's three examples):
 * lhs has only DATA args of the model      -> likelihood p(data | params)
@@ -16,10 +19,22 @@ Semantics (matching the paper's three examples):
 * lhs has both                             -> joint p(data, params)
 * rhs has ``chain``                        -> posterior predictive
   log( 1/M * sum_i exp(loglike_i) )  computed with logsumexp.
+
+Every query lowers to ONE cached :class:`~repro.core.program.
+CompiledProgram` over the flat constrained buffer: parameter values are
+packed site-by-site into the trace's :class:`FlatLayout`, query-bound
+data arrays are TRACED INPUTS (keyed by shape/dtype, so heterogeneous
+requests with equal shapes share a program — the serving tier batches
+on exactly this key), and posterior predictives evaluate all M draws as
+one ``vmap`` over a stacked ``(M, num_flat)`` buffer instead of a
+Python loop. ``prob(..., compiled=False)`` keeps the eager
+re-execution path (still vmapped over draws) as the parity oracle.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import ast
+import types
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +43,11 @@ import numpy as np
 from repro.core.contexts import (DefaultContext, LikelihoodContext,
                                  PriorContext)
 from repro.core.model import Model, ModelGen
-from repro.core.primitives import missing
+from repro.core.program import (CompiledProgram, ProgramCache, ProgramKey,
+                                data_fingerprint, model_fingerprint,
+                                program_cache)
 
-__all__ = ["prob", "parse_query"]
+__all__ = ["PreparedQuery", "parse_query", "prepare_query", "prob"]
 
 
 def _split_top_level(s: str, sep: str) -> Tuple[str, ...]:
@@ -50,27 +67,146 @@ def _split_top_level(s: str, sep: str) -> Tuple[str, ...]:
     return tuple(p.strip() for p in parts if p.strip())
 
 
+# ---------------------------------------------------------------------------
+# Restricted expression evaluator (no eval, no builtins)
+# ---------------------------------------------------------------------------
+_BINOPS = {ast.Add: lambda a, b: a + b, ast.Sub: lambda a, b: a - b,
+           ast.Mult: lambda a, b: a * b, ast.Div: lambda a, b: a / b,
+           ast.Pow: lambda a, b: a ** b, ast.FloorDiv: lambda a, b: a // b,
+           ast.Mod: lambda a, b: a % b, ast.MatMult: lambda a, b: a @ b}
+_UNARYOPS = {ast.UAdd: lambda a: +a, ast.USub: lambda a: -a}
+
+
+def _whitelisted_module(obj) -> bool:
+    """np/jnp and their submodules are the only attribute roots."""
+    return (isinstance(obj, types.ModuleType)
+            and (obj.__name__ == "numpy" or obj.__name__.startswith("numpy.")
+                 or obj.__name__ == "jax" or obj.__name__.startswith("jax.")))
+
+
+def _safe_eval(expr: str, env: Dict[str, Any]):
+    """Evaluate a query expression through a restricted AST walk.
+
+    Allowed: literals, names from ``env``, tuple/list display,
+    subscripts/slices, unary ±, binary arithmetic, and attribute access
+    / calls rooted at the ``np``/``jnp`` modules. Everything else —
+    lambdas, comprehensions, f-strings, calls to arbitrary objects —
+    raises a ``ValueError`` naming the construct.
+    """
+    try:
+        tree = ast.parse(expr, mode="eval")
+    except SyntaxError as e:
+        raise ValueError(
+            f"malformed query expression {expr!r}: {e.msg}") from None
+
+    def ev(node):
+        if isinstance(node, ast.Expression):
+            return ev(node.body)
+        if isinstance(node, ast.Constant):
+            return node.value
+        if isinstance(node, ast.Name):
+            if node.id not in env:
+                raise ValueError(
+                    f"unbound name '{node.id}' in query expression "
+                    f"{expr!r}; pass it as a keyword binding to prob()")
+            return env[node.id]
+        if isinstance(node, ast.Attribute):
+            base = ev(node.value)
+            if not _whitelisted_module(base):
+                raise ValueError(
+                    f"attribute access on {type(base).__name__!r} is not "
+                    f"allowed in query expression {expr!r}; only np/jnp "
+                    "attributes may be used")
+            if node.attr.startswith("_"):
+                raise ValueError(
+                    f"private attribute '{node.attr}' is not allowed in "
+                    f"query expression {expr!r}")
+            return getattr(base, node.attr)
+        if isinstance(node, ast.Call):
+            if not isinstance(node.func, ast.Attribute):
+                raise ValueError(
+                    f"only calls to np.*/jnp.* functions are allowed in "
+                    f"query expression {expr!r}")
+            fn = ev(node.func)
+            args = [ev(a) for a in node.args]
+            kwargs = {kw.arg: ev(kw.value) for kw in node.keywords
+                      if kw.arg is not None}
+            if len(kwargs) != sum(1 for kw in node.keywords):
+                raise ValueError(
+                    f"**kwargs unpacking is not allowed in query "
+                    f"expression {expr!r}")
+            return fn(*args, **kwargs)
+        if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
+            return _BINOPS[type(node.op)](ev(node.left), ev(node.right))
+        if isinstance(node, ast.UnaryOp) and type(node.op) in _UNARYOPS:
+            return _UNARYOPS[type(node.op)](ev(node.operand))
+        if isinstance(node, ast.Tuple):
+            return tuple(ev(e) for e in node.elts)
+        if isinstance(node, ast.List):
+            return [ev(e) for e in node.elts]
+        if isinstance(node, ast.Subscript):
+            return ev(node.value)[ev(node.slice)]
+        if isinstance(node, ast.Slice):
+            return slice(None if node.lower is None else ev(node.lower),
+                         None if node.upper is None else ev(node.upper),
+                         None if node.step is None else ev(node.step))
+        raise ValueError(
+            f"disallowed syntax {type(node).__name__!r} in query "
+            f"expression {expr!r}")
+
+    return ev(tree)
+
+
 def parse_query(spec: str, bindings: Dict[str, Any]) -> Tuple[Dict, Dict]:
-    """Parse ``"a = e1, b = e2 | c = e3, ..."`` into (lhs, rhs) dicts."""
+    """Parse ``"a = e1, b = e2 | c = e3, ..."`` into (lhs, rhs) dicts.
+
+    Malformed specs fail with precise messages: a missing ``|``, an
+    empty side, a duplicate name within a side, a non-identifier bare
+    item, or a bare name with no matching keyword binding.
+    """
     if "|" not in spec:
         raise ValueError("query must contain '|' separating target and given")
     lhs_s, rhs_s = spec.split("|", 1)
     env = {"np": np, "jnp": jnp}
     env.update(bindings)
 
-    def parse_side(side: str) -> Dict[str, Any]:
-        out = {}
-        for item in _split_top_level(side, ","):
+    def parse_side(side: str, label: str) -> Dict[str, Any]:
+        items = _split_top_level(side, ",")
+        if not items:
+            raise ValueError(
+                f"empty {label} side in query {spec!r}; expected "
+                "'name = expr, ...'")
+        out: Dict[str, Any] = {}
+        for item in items:
             if "=" not in item:
-                # bare name: value comes from bindings under the same name
                 name = item.strip()
-                out[name] = env[name]
-                continue
-            name, expr = item.split("=", 1)
-            out[name.strip()] = eval(expr.strip(), {"__builtins__": {}}, env)
+                if not name.isidentifier():
+                    raise ValueError(
+                        f"malformed item {item!r} on the {label} side of "
+                        f"query {spec!r}; expected 'name = expr' or a bare "
+                        "bound name")
+                if name not in bindings:
+                    raise ValueError(
+                        f"bare name '{name}' on the {label} side of query "
+                        f"{spec!r} has no keyword binding; pass "
+                        f"{name}=... to prob()")
+                value = bindings[name]
+            else:
+                name, expr = item.split("=", 1)
+                name = name.strip()
+                if not name.isidentifier():
+                    raise ValueError(
+                        f"invalid name {name!r} on the {label} side of "
+                        f"query {spec!r}")
+                value = _safe_eval(expr.strip(), env)
+            if name in out:
+                raise ValueError(
+                    f"duplicate name '{name}' on the {label} side of "
+                    f"query {spec!r}")
+            out[name] = value
         return out
 
-    return parse_side(lhs_s), parse_side(rhs_s)
+    return parse_side(lhs_s, "lhs"), parse_side(rhs_s, "rhs")
 
 
 def _model_instance(gen_or_model, data_args: Dict[str, Any]) -> Model:
@@ -81,8 +217,20 @@ def _model_instance(gen_or_model, data_args: Dict[str, Any]) -> Model:
     raise TypeError("rhs 'model =' must be a Model or ModelGen")
 
 
-def prob(spec: str, **bindings) -> jax.Array:
-    """Evaluate a probability query; returns the LOG probability (density)."""
+# ---------------------------------------------------------------------------
+# Query lowering: spec -> (kind, ctx, model, values/chain split)
+# ---------------------------------------------------------------------------
+class _LoweredQuery(NamedTuple):
+    model: Model          # bound model (incl. query-bound data)
+    kind: str             # "prior" | "likelihood" | "joint" | ...
+    ctx: Any              # accumulation context for the density
+    values: Dict          # constrained parameter values (non-chain kinds)
+    chain: Optional[Dict]  # stacked draws (posterior predictive only)
+    fixed: Dict           # rhs params fixed alongside the chain
+    data_args: Dict       # data bound BY THE QUERY (candidate trace inputs)
+
+
+def _lower(spec: str, bindings: Dict[str, Any]) -> _LoweredQuery:
     lhs, rhs = parse_query(spec, bindings)
     if "model" not in rhs:
         raise ValueError("query rhs must bind 'model = <model>'")
@@ -102,23 +250,255 @@ def prob(spec: str, **bindings) -> jax.Array:
     m = _model_instance(gen, data_args)
 
     if chain is not None:
-        # posterior predictive: average likelihood over posterior draws
-        names = list(chain.keys())
-        M = np.shape(chain[names[0]])[0]
-
-        def loglike_one(draw):
-            vals = {**draw, **rhs_params}
-            return m.loglikelihood(vals)
-
-        draws = [{n: jnp.asarray(chain[n])[i] for n in names} for i in range(M)]
-        lls = jnp.stack([loglike_one(d) for d in draws])
-        return jax.scipy.special.logsumexp(lls) - jnp.log(float(M))
+        _check_chain(chain)
+        return _LoweredQuery(m, "posterior_predictive", LikelihoodContext(),
+                             {}, dict(chain), rhs_params, data_args)
 
     values = {**rhs_params, **lhs_params}
     if lhs_params and not lhs_data:
-        ctx = PriorContext(frozenset(lhs_params))
+        ctx, kind = PriorContext(frozenset(lhs_params)), "prior"
     elif lhs_data and not lhs_params:
-        ctx = LikelihoodContext()
+        ctx, kind = LikelihoodContext(), "likelihood"
     else:
-        ctx = DefaultContext()
-    return m.logp_with_context(values, ctx)
+        ctx, kind = DefaultContext(), "joint"
+    return _LoweredQuery(m, kind, ctx, values, None, rhs_params, data_args)
+
+
+def _check_chain(chain: Dict[str, Any]) -> None:
+    if not chain:
+        raise ValueError("query 'chain' binding is empty; expected a dict "
+                         "of name -> (M, ...) stacked draws")
+    counts = {n: int(np.shape(v)[0]) if np.ndim(v) else -1
+              for n, v in chain.items()}
+    if min(counts.values()) < 0:
+        bad = [n for n, c in counts.items() if c < 0]
+        raise ValueError(f"chain entries {bad} are scalars; every entry "
+                         "needs a leading draw axis (M, ...)")
+    if len(set(counts.values())) > 1:
+        detail = ", ".join(f"'{n}': {c}" for n, c in sorted(counts.items()))
+        raise ValueError(
+            "chain entries disagree on the number of draws M "
+            f"({detail}); all stacked draws must share the leading axis")
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer packing (host side, per request)
+# ---------------------------------------------------------------------------
+def _flat_dtype():
+    return jnp.zeros(()).dtype  # matches TypedVarInfo.flat() promotion
+
+
+def _pack_values(tvi, values: Dict[str, Any]) -> jax.Array:
+    """Pack a full constrained values dict into one flat buffer."""
+    dtype = _flat_dtype()
+    parts = []
+    for s in tvi.layout.sites:
+        if s.name not in values:
+            raise ValueError(
+                f"query must bind a value for parameter site '{s.name}' "
+                f"(bound: {sorted(values)})")
+        v = jnp.asarray(values[s.name], dtype)
+        try:
+            v = jnp.broadcast_to(v, s.shape)
+        except Exception:
+            raise ValueError(
+                f"value for site '{s.name}' has shape {np.shape(v)}, "
+                f"expected broadcastable to {s.shape}") from None
+        parts.append(jnp.reshape(v, (s.size,)))
+    return (jnp.concatenate(parts) if parts
+            else jnp.zeros((0,), dtype))
+
+
+def _pack_draws(tvi, chain: Dict[str, Any], fixed: Dict[str, Any],
+                M: int) -> jax.Array:
+    """Pack M stacked draws (plus fixed values) into an (M, num_flat)
+    buffer — site-ordered blocks, NO per-draw Python loop."""
+    dtype = _flat_dtype()
+    parts = []
+    for s in tvi.layout.sites:
+        if s.name in chain:
+            arr = jnp.asarray(chain[s.name], dtype)
+            if arr.shape[1:] != s.shape:
+                try:
+                    arr = jnp.broadcast_to(arr, (M,) + s.shape)
+                except Exception:
+                    raise ValueError(
+                        f"chain draws for '{s.name}' have per-draw shape "
+                        f"{arr.shape[1:]}, expected {s.shape}") from None
+            parts.append(jnp.reshape(arr, (M, s.size)))
+        elif s.name in fixed:
+            v = jnp.broadcast_to(jnp.asarray(fixed[s.name], dtype), s.shape)
+            parts.append(jnp.broadcast_to(jnp.reshape(v, (1, s.size)),
+                                          (M, s.size)))
+        else:
+            raise ValueError(
+                f"posterior-predictive query must cover parameter site "
+                f"'{s.name}' via the chain or an rhs binding "
+                f"(chain: {sorted(chain)}, rhs: {sorted(fixed)})")
+    return jnp.concatenate(parts, axis=1)
+
+
+def _split_trace_inputs(data_args: Dict[str, Any]):
+    """Query-bound data: arrays become traced program inputs (keyed on
+    shape/dtype); scalars and anything structural stays static — baked
+    into the program and content-fingerprinted in the key, since models
+    may use them for Python-level control flow."""
+    traced, static = {}, {}
+    for k, v in data_args.items():
+        if isinstance(v, (np.ndarray, jax.Array)) and np.ndim(v) >= 1:
+            traced[k] = jnp.asarray(v)
+        else:
+            static[k] = v
+    return traced, static
+
+
+# ---------------------------------------------------------------------------
+# Compiled query programs
+# ---------------------------------------------------------------------------
+class PreparedQuery(NamedTuple):
+    """A query lowered to its cached program + this request's arguments.
+
+    ``program(*args)`` evaluates the query. The serving tier groups
+    requests by ``key`` and stacks their ``args`` into one batched
+    evaluation (``program.raw`` is the unjitted per-request function it
+    vmaps over).
+    """
+
+    key: ProgramKey
+    program: CompiledProgram
+    args: Tuple
+    kind: str
+    num_draws: Optional[int] = None
+
+
+def prepare_query(spec: str, bindings: Dict[str, Any],
+                  cache: Optional[ProgramCache] = None) -> PreparedQuery:
+    """Lower a query string to its cached flat-buffer program.
+
+    The cache key is ``(base model fingerprint, "query/<kind>", layout,
+    batch, backend, (ctx, static-data fingerprint, traced-data shape
+    signature))`` — two requests differing only in bound array CONTENT
+    share one program; differing shapes/dtypes, contexts, or static data
+    compile separate ones.
+    """
+    cache = cache if cache is not None else program_cache()
+    low = _lower(spec, bindings)
+    traced, static = _split_trace_inputs(low.data_args)
+    data_names = tuple(sorted(traced))
+    data_sig = tuple((n, tuple(traced[n].shape), str(traced[n].dtype))
+                     for n in data_names)
+    static_fp = tuple(sorted((k, data_fingerprint(v))
+                             for k, v in static.items()))
+    base = low.model  # bound model: data content rides in the fingerprint
+    # the traced data args must NOT be fingerprinted (they are inputs):
+    # fingerprint the model with them replaced by their shape signature
+    base_fp = _model_fp_without(base, data_names)
+
+    if low.chain is not None:
+        M = int(np.shape(next(iter(low.chain.values())))[0])
+        key = ProgramKey(base_fp, "query/posterior_predictive", None, (M,),
+                         "fused", (low.ctx, static_fp, data_sig))
+        entry = cache.get_or_build(
+            key, lambda: _build_ppd_program(key, low, data_names))
+        draws_flat = _pack_draws(entry.template, low.chain, low.fixed, M)
+        args = (draws_flat,) + tuple(traced[n] for n in data_names)
+        return PreparedQuery(key, entry, args, low.kind, M)
+
+    key = ProgramKey(base_fp, f"query/{low.kind}", None, (), "fused",
+                     (low.ctx, static_fp, data_sig))
+    entry = cache.get_or_build(
+        key, lambda: _build_query_program(key, low, data_names))
+    flat = _pack_values(entry.template, low.values)
+    args = (flat,) + tuple(traced[n] for n in data_names)
+    return PreparedQuery(key, entry, args, low.kind)
+
+
+def _model_fp_without(m: Model, traced_names: Tuple[str, ...]) -> Tuple:
+    if not traced_names:
+        return model_fingerprint(m)
+    sentinel = {n: None for n in traced_names}
+    return model_fingerprint(m.bind(**sentinel))
+
+
+def _template_tvi(m: Model):
+    """Discovery trace fixing the layout the query program addresses.
+
+    Only the layout (shapes/dtypes/supports) is consumed — the drawn
+    VALUES are replaced through ``replace_flat`` on every call, so the
+    fixed discovery key cannot bias results."""
+    return m.typed_varinfo(jax.random.PRNGKey(0))
+
+
+def _build_query_program(key: ProgramKey, low: _LoweredQuery,
+                         data_names: Tuple[str, ...]) -> CompiledProgram:
+    template = _template_tvi(low.model)
+    base, ctx = low.model, low.ctx
+
+    def raw(flat, *data_vals):
+        mm = base.bind(**dict(zip(data_names, data_vals))) \
+            if data_names else base
+        return mm.logp_with_context(template.replace_flat(flat), ctx)
+
+    prog = CompiledProgram(key, raw)
+    prog.template = template
+    return prog
+
+
+def _build_ppd_program(key: ProgramKey, low: _LoweredQuery,
+                       data_names: Tuple[str, ...]) -> CompiledProgram:
+    template = _template_tvi(low.model)
+    base, ctx = low.model, low.ctx
+    M = key.batch[0]
+
+    def raw(draws_flat, *data_vals):
+        mm = base.bind(**dict(zip(data_names, data_vals))) \
+            if data_names else base
+
+        def one(flat):
+            return mm.logp_with_context(template.replace_flat(flat), ctx)
+
+        lls = jax.vmap(one)(draws_flat)
+        return jax.scipy.special.logsumexp(lls) - jnp.log(float(M))
+
+    prog = CompiledProgram(key, raw)
+    prog.template = template
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+def prob(spec: str, *, compiled: bool = True,
+         cache: Optional[ProgramCache] = None, **bindings) -> jax.Array:
+    """Evaluate a probability query; returns the LOG probability (density).
+
+    ``compiled=True`` (default) lowers the query to a cached
+    :class:`CompiledProgram` over the flat buffer — repeated queries of
+    the same shape reuse one jitted function, and posterior predictives
+    evaluate all M draws in one ``jit(vmap)``. ``compiled=False`` is the
+    eager re-execution path (parity oracle; still vmapped over draws,
+    never a per-draw Python loop).
+    """
+    if compiled:
+        pq = prepare_query(spec, bindings, cache=cache)
+        return pq.program(*pq.args)
+    return _prob_eager(spec, bindings)
+
+
+def _prob_eager(spec: str, bindings: Dict[str, Any]) -> jax.Array:
+    low = _lower(spec, bindings)
+    m = low.model
+    if low.chain is not None:
+        # posterior predictive: average likelihood over posterior draws —
+        # ONE vmap over the stacked-draws pytree (a single trace), not a
+        # Python loop with one retrace per draw
+        stacked = {n: jnp.asarray(v) for n, v in low.chain.items()}
+        M = int(next(iter(stacked.values())).shape[0])
+        fixed = low.fixed
+
+        def loglike_one(draw):
+            return m.loglikelihood({**draw, **fixed})
+
+        lls = jax.vmap(loglike_one)(stacked)
+        return jax.scipy.special.logsumexp(lls) - jnp.log(float(M))
+    return m.logp_with_context(low.values, low.ctx)

@@ -13,8 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.contexts import Context
+from repro.core.contexts import Context, DefaultContext
 from repro.core.model import Model
+from repro.core.program import (CompiledProgram, ProgramKey, density_program,
+                                model_fingerprint, program_cache)
 from repro.core.varinfo import TypedVarInfo, assert_continuous_supports
 from repro.optim import adam, apply_updates
 
@@ -54,14 +56,14 @@ class ADVI:
                else m.typed_varinfo(k_init))
         assert_continuous_supports(tvi, "ADVI")
         tvi = tvi.link()
-        logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
+        logdensity = density_program(m, tvi, ctx=ctx, backend=self.backend)
         dim = int(tvi.flat().shape[0])
 
         def neg_elbo(params, key):
             mu, log_sigma = params
             eps = jax.random.normal(key, (self.num_mc, dim))
             u = mu + jnp.exp(log_sigma) * eps
-            lps = jax.vmap(logdensity)(u)
+            lps = jax.vmap(logdensity.raw)(u)
             entropy = jnp.sum(log_sigma) + 0.5 * dim * (1.0 + jnp.log(2 * jnp.pi))
             return -(jnp.mean(lps) + entropy)
 
@@ -70,11 +72,22 @@ class ADVI:
         params = (jnp.zeros((dim,)), jnp.full((dim,), -2.0))
         state = opt.init(params)
 
-        @jax.jit
-        def step(params, state, key):
+        def raw_step(params, state, key):
             loss, grads = jax.value_and_grad(neg_elbo)(params, key)
             deltas, state = opt.update(grads, state, params)
             return apply_updates(params, deltas), state, loss
+
+        # The whole optimisation step is one cached program: re-running ADVI
+        # on the same model/layout/hyperparameters reuses the jitted step
+        # instead of retracing a fresh closure every `run` call.
+        cache = program_cache()
+        step_key = ProgramKey(
+            model_fingerprint(m), "advi_step", tvi.layout, (),
+            self.backend,
+            (ctx if ctx is not None else DefaultContext(),
+             int(self.num_mc), float(self.lr)))
+        step = cache.get_or_build(
+            step_key, lambda: CompiledProgram(step_key, raw_step))
 
         elbos = []
         keys = jax.random.split(k_run, self.num_steps)

@@ -247,10 +247,24 @@ def package_draws(tvi_linked, qs, stats: Optional[Dict[str, Any]] = None) -> Cha
     """
     import jax
 
-    def to_constrained(q):
-        return tvi_linked.replace_flat(q).invlink().as_dict()
+    from repro.core.program import (CompiledProgram, ProgramKey,
+                                    program_cache, trace_fingerprint)
 
-    draws = jax.jit(jax.vmap(jax.vmap(to_constrained)))(qs)
+    # cached on the trace FINGERPRINT (layout + dist-leaf content): the
+    # invlink bakes the stored dists' parameters (e.g. Uniform bounds),
+    # so equal-layout traces with different dist params compile apart
+    key = ProgramKey(trace_fingerprint(tvi_linked), "package",
+                     tvi_linked.layout, (), "fused", ())
+
+    def build():
+        def to_constrained(q):
+            return tvi_linked.replace_flat(q).invlink().as_dict()
+
+        return CompiledProgram(
+            key, lambda q: jax.vmap(jax.vmap(to_constrained))(q))
+
+    prog = program_cache().get_or_build(key, build)
+    draws = prog(qs)
     return Chain({k: np.asarray(v) for k, v in draws.items()},
                  stats={k: np.asarray(v) for k, v in (stats or {}).items()})
 
@@ -279,14 +293,15 @@ def setup_chain_driver(key, model, kernel, *, num_chains: int,
            else model.typed_varinfo(k_init))
     assert_continuous_supports(tvi, type(kernel).__name__)
     tvi = tvi.link()
-    logdensity = model.make_logdensity_fn(tvi, backend=backend)
+    # density + PotentialSpec come from the ProgramCache: repeated
+    # run_chains / driver-segment calls on the same (model, layout,
+    # backend) reuse one compiled program instead of re-tracing
+    from repro.core.program import cached_potential, density_program
+    logdensity = density_program(model, tvi, backend=backend)
     dim = int(tvi.num_flat)
     spec, spec_reason = None, None
     if getattr(kernel, "uses_potential_spec", False):
-        # lazy import: chains.py is imported by hmc.py/nuts.py, which in
-        # turn are what core.potential's validation machinery sits beside
-        from repro.core.potential import compile_potential
-        res = compile_potential(model, tvi, backend=backend)
+        res = cached_potential(model, tvi, backend=backend)
         spec, spec_reason = res.spec, res.reason
     kern = (kernel.make_kernel(logdensity, dim, spec=spec)
             if spec is not None else kernel.make_kernel(logdensity, dim))
@@ -381,6 +396,12 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
             checkpoint_keep=checkpoint_keep, preemption=preemption,
             fallback=fallback)
 
+    from repro.core.program import (CompiledProgram, ProgramKey,
+                                    kernel_fingerprint, model_fingerprint,
+                                    program_cache)
+    cache = program_cache()
+    stats0 = cache.stats()
+
     tvi, kern, dim, q0s, chain_keys = setup_chain_driver(
         key, model, kernel, num_chains=num_chains, init_varinfo=init_varinfo,
         init_jitter=init_jitter, backend=backend)
@@ -404,11 +425,32 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         _, outs = jax.lax.scan(kern.step, state, skeys)
         return outs
 
-    outs = jax.jit(jax.vmap(one_chain))(chain_keys, q0s)
+    # the WHOLE vmapped chain program is cached — jit keys on function
+    # identity, so without this every run_chains call would re-trace even
+    # though density/spec were reused. Keyed on the sampler's full config
+    # fingerprint; a non-dataclass kernel cannot be fingerprinted safely
+    # and bypasses the cache.
+    kfp = kernel_fingerprint(kernel)
+    if kfp is not None:
+        ckey_prog = ProgramKey(
+            model_fingerprint(model), "chain", tvi.layout,
+            (num_chains, num_warmup, num_samples), backend,
+            (kfp, float(init_jitter)))
+        prog = cache.get_or_build(
+            ckey_prog,
+            lambda: CompiledProgram(
+                ckey_prog, lambda ks, qs: jax.vmap(one_chain)(ks, qs)))
+        outs = prog(chain_keys, q0s)
+    else:
+        outs = jax.jit(jax.vmap(one_chain))(chain_keys, q0s)
     qs = outs.pop("q")
     chain = package_draws(tvi, qs, stats=outs)
     from repro.infer.driver import health_from_stats
     chain.health = health_from_stats(chain.stats, num_warmup=num_warmup,
                                      num_samples=num_samples,
                                      num_chains=num_chains)
+    s1 = cache.stats()
+    chain.health.cache_hits = max(0, s1["hits"] - stats0["hits"])
+    chain.health.cache_misses = max(0, s1["misses"] - stats0["misses"])
+    chain.health.cache_retraces = max(0, s1["retraces"] - stats0["retraces"])
     return chain

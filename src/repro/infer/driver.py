@@ -78,6 +78,9 @@ class ChainHealth:
     preempted: bool = False
     resumed_from: Optional[int] = None
     checkpoint_dir: Optional[str] = None
+    cache_hits: int = 0             # ProgramCache hits during this run
+    cache_misses: int = 0           # programs compiled during this run
+    cache_retraces: int = 0         # jit traces of cached programs
 
     @property
     def completed_samples(self) -> int:
@@ -119,6 +122,10 @@ class ChainHealth:
         if self.resumed_from is not None:
             lines.append(f"  resumed from committed iteration "
                          f"{self.resumed_from}")
+        if self.cache_hits or self.cache_misses or self.cache_retraces:
+            lines.append(f"  program cache: {self.cache_hits} hit(s), "
+                         f"{self.cache_misses} miss(es), "
+                         f"{self.cache_retraces} retrace(s)")
         return "\n".join(lines)
 
 
@@ -248,6 +255,11 @@ def run_segmented(key, model, sampler, num_samples: int, *,
     if seg <= 0:
         raise ValueError("checkpoint_every must be positive")
 
+    from repro.core.program import (ProgramKey, kernel_fingerprint,
+                                    model_fingerprint, program_cache)
+    cache = program_cache()
+    cstats0 = cache.stats()
+
     tvi, kern, dim, q0s, chain_keys = setup_chain_driver(
         key, model, sampler, num_chains=num_chains,
         init_varinfo=init_varinfo, init_jitter=init_jitter, backend=backend)
@@ -312,7 +324,19 @@ def run_segmented(key, model, sampler, num_samples: int, *,
                 jax.jit(jax.vmap(samp_seg)),
                 jax.jit(lambda s: _strong(jax.vmap(k.finalize)(s))))
 
-    init_fn, warm_fn, samp_fn, final_fn = _segment_fns(kern)
+    # the segment-function tuple is cached like the single-scan chain
+    # program: a resumed (or merely repeated) run with the same (model,
+    # layout, sampler config, backend) reuses the SAME jitted closures,
+    # so jax's executable cache — which keys on function identity —
+    # carries over and no segment re-traces
+    kfp = kernel_fingerprint(sampler)
+    if kfp is not None:
+        seg_key = ProgramKey(model_fingerprint(model), "segment_fns",
+                             tvi.layout, (), backend, (kfp, "primary"))
+        fns = cache.get_or_build(seg_key, lambda: _segment_fns(kern))
+    else:
+        fns = _segment_fns(kern)
+    init_fn, warm_fn, samp_fn, final_fn = fns
     state = init_fn(q0s)
 
     # preallocate full-run draw/stat buffers from the step's out spec
@@ -324,9 +348,13 @@ def run_segmented(key, model, sampler, num_samples: int, *,
                  for k, v in out_spec.items() if k != "q"}
     counters = {"nonfinite": np.zeros(num_chains, np.int64),
                 "divergences": np.zeros(num_chains, np.int64),
-                "fallbacks": np.zeros((), np.int64)}
+                "fallbacks": np.zeros((), np.int64),
+                "cache_misses": np.zeros((), np.int64),
+                "cache_retraces": np.zeros((), np.int64)}
 
-    meta = {"format": "run_chains/1", "num_chains": int(num_chains),
+    # format bumped to /2 when the cache counters joined RunState: a /1
+    # snapshot has a different pytree and is refused by the meta check
+    meta = {"format": "run_chains/2", "num_chains": int(num_chains),
             "num_warmup": int(num_warmup), "num_samples": int(num_samples),
             "dim": int(dim), "sampler": type(sampler).__name__,
             "backend": backend,
@@ -345,10 +373,24 @@ def run_segmented(key, model, sampler, num_samples: int, *,
                 buf[:, d0:d1] = o[name]
         pending.clear()
 
+    # cache counters accumulate ACROSS resumes: the restored totals are
+    # the base, this session's cache-stat delta is added on top at every
+    # snapshot (retraces include nested density-program traces)
+    cache_base = {"misses": 0, "retraces": 0}
+
+    def _sync_cache_counters():
+        s = cache.stats()
+        counters["cache_misses"] = np.int64(
+            cache_base["misses"] + max(0, s["misses"] - cstats0["misses"]))
+        counters["cache_retraces"] = np.int64(
+            cache_base["retraces"]
+            + max(0, s["retraces"] - cstats0["retraces"]))
+
     def _snapshot(it):
         # buffers are COPIED: the async writer must see a frozen view
         # while the next segment mutates the live ones
         _flush()
+        _sync_cache_counters()
         return RunState(np.int64(it), state, q_buf.copy(),
                         {k: v.copy() for k, v in stat_bufs.items()},
                         {k: v.copy() for k, v in counters.items()})
@@ -369,6 +411,8 @@ def run_segmented(key, model, sampler, num_samples: int, *,
                          for k, v in restored.stat_bufs.items()}
             counters = {k: np.asarray(v)
                         for k, v in restored.counters.items()}
+            cache_base = {"misses": int(counters["cache_misses"]),
+                          "retraces": int(counters["cache_retraces"])}
             resumed_from = it
 
     own_handler = preemption is None and checkpoint_dir is not None
@@ -467,6 +511,7 @@ def run_segmented(key, model, sampler, num_samples: int, *,
             preemption.uninstall()
 
     _flush()
+    _sync_cache_counters()
     completed_samples = max(0, it - num_warmup)
     stats = {k: v[:, :completed_samples] for k, v in stat_bufs.items()}
     if completed_samples:
@@ -484,5 +529,8 @@ def run_segmented(key, model, sampler, num_samples: int, *,
         stuck=rails.stuck(), outliers=rails.outliers(),
         fallback_segments=int(counters["fallbacks"]),
         preempted=preempted, resumed_from=resumed_from,
-        checkpoint_dir=checkpoint_dir)
+        checkpoint_dir=checkpoint_dir,
+        cache_hits=max(0, cache.stats()["hits"] - cstats0["hits"]),
+        cache_misses=int(counters["cache_misses"]),
+        cache_retraces=int(counters["cache_retraces"]))
     return chain

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.contexts import Context
 from repro.core.model import Model
-from repro.core.potential import compile_potential
+from repro.core.program import cached_potential, density_program
 from repro.core.varinfo import TypedVarInfo, assert_continuous_supports
 from repro.infer.chains import Chain, TransitionKernel, package_draws
 from repro.kernels.fused_leapfrog import (fused_leapfrog,
@@ -214,10 +214,10 @@ class HMC:
                else m.typed_varinfo(k_init))
         assert_continuous_supports(tvi, "HMC")
         tvi = tvi.link()
-        logdensity = m.make_logdensity_fn(tvi, ctx=ctx, backend=self.backend)
+        logdensity = density_program(m, tvi, ctx=ctx, backend=self.backend)
         spec, spec_reason = None, None
         if self.uses_potential_spec:
-            res = compile_potential(m, tvi, ctx=ctx, backend=self.backend)
+            res = cached_potential(m, tvi, ctx=ctx, backend=self.backend)
             spec, spec_reason = res.spec, res.reason
         # ONE adaptation/transition code path for fused and reference
         # integrators: everything below routes through the TransitionKernel

@@ -17,6 +17,7 @@ import numpy as np
 
 
 from repro.core.model import Model
+from repro.core.program import density_program
 from repro.core.varinfo import TypedVarInfo
 from repro.infer.chains import Chain, TransitionKernel
 from repro.infer.hmc import HMC
@@ -79,7 +80,7 @@ class RWMH:
         k_init, k_run = jax.random.split(key)
         tvi = (init_varinfo if init_varinfo is not None
                else m.typed_varinfo(k_init)).link()
-        logdensity = m.make_logdensity_fn(tvi, backend=self.backend)
+        logdensity = density_program(m, tvi, backend=self.backend)
         dim = int(tvi.flat().shape[0])
 
         def mh_step(carry, key):

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.model import Model
-from repro.core.potential import compile_potential
+from repro.core.program import cached_potential, density_program
 from repro.core.varinfo import TypedVarInfo, assert_continuous_supports
 from repro.infer.chains import Chain, TransitionKernel
 from repro.infer.hmc import DualAveraging, HMC
@@ -295,10 +295,10 @@ class NUTS:
                else m.typed_varinfo(k_init))
         assert_continuous_supports(tvi, "NUTS")
         tvi = tvi.link()
-        logdensity = m.make_logdensity_fn(tvi, backend=self.backend)
+        logdensity = density_program(m, tvi, backend=self.backend)
         spec, spec_reason = None, None
         if self.uses_potential_spec:
-            res = compile_potential(m, tvi, backend=self.backend)
+            res = cached_potential(m, tvi, backend=self.backend)
             spec, spec_reason = res.spec, res.reason
         ld_grad = self._make_ld_grad(logdensity, spec, spec_reason)
         dim = int(tvi.flat().shape[0])

@@ -18,8 +18,19 @@ import jax.numpy as jnp
 
 from repro.core.contexts import MiniBatchContext
 from repro.core.model import Model
+from repro.core.program import (CompiledProgram, ProgramKey,
+                                model_fingerprint, program_cache)
 
 __all__ = ["SGLD", "make_sgld_step"]
+
+
+def _struct_sig(tree) -> Tuple:
+    """Structural (shape/dtype/treedef) signature of a pytree — safe to use
+    in a program cache key even when the leaves are tracers."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef,
+            tuple((tuple(jnp.shape(l)), jnp.result_type(l).name)
+                  for l in leaves))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,8 +87,10 @@ def make_sgld_step(m: Model, scale: float, sgld: Optional[SGLD] = None,
     kernels by default, per-site reference otherwise)."""
     sgld = sgld if sgld is not None else SGLD()
     ctx = MiniBatchContext(scale=scale)
+    cache = program_cache()
+    mfp = model_fingerprint(m)
 
-    def step(key, params, state, **batch):
+    def raw_step(key, params, state, batch):
         def logjoint(p):
             mm = m.bind(**batch)
             return mm.logp_with_context({param_site: p}, ctx, backend=backend)
@@ -85,5 +98,22 @@ def make_sgld_step(m: Model, scale: float, sgld: Optional[SGLD] = None,
         logp, grads = jax.value_and_grad(logjoint)(params)
         params, state = sgld.step(key, params, grads, state)
         return params, state, logp
+
+    def step(key, params, state, **batch):
+        # Lazily resolve the cached program at call time: the key depends on
+        # the structural signatures of params/state/batch, which we only see
+        # here. Signatures use shapes+dtypes (never content), so this also
+        # works when the caller jits `step` and hands us tracers — the inner
+        # jit is a no-op under an outer trace, and a later eager call reuses
+        # the already-traced program.
+        batch_names = tuple(sorted(batch))
+        pkey = ProgramKey(
+            mfp, "sgld_step", None, (), backend,
+            (float(scale), sgld, param_site, batch_names,
+             _struct_sig(params), _struct_sig(state),
+             _struct_sig([batch[n] for n in batch_names])))
+        prog = cache.get_or_build(
+            pkey, lambda: CompiledProgram(pkey, raw_step))
+        return prog(key, params, state, dict(batch))
 
     return step

@@ -82,7 +82,8 @@ def test_roofline_report_schema_valid():
 
 @pytest.mark.parametrize("fname", ["BENCH_leapfrog.json",
                                    "BENCH_logjoint.json",
-                                   "BENCH_roofline.json"])
+                                   "BENCH_roofline.json",
+                                   "BENCH_queries.json"])
 def test_committed_baselines_schema_valid(fname):
     path = os.path.join(REPO_ROOT, fname)
     assert os.path.exists(path), f"{fname} baseline not committed"
@@ -100,3 +101,18 @@ def test_committed_leapfrog_baseline_records_speedup():
         if x.get("supported") and "max_err_q" in x:
             assert x["max_err_q"] < 1e-5, name
             assert x["rel_err_logp"] < 1e-5, name
+
+
+def test_committed_queries_baseline_records_speedup():
+    """The acceptance record: the posterior predictive over M=1000 draws
+    compiles exactly ONE program and beats the per-draw loop >= 10x."""
+    rep = read_report(os.path.join(REPO_ROOT, "BENCH_queries.json"))
+    by_name = {e["name"]: e["extra"] for e in rep["entries"]}
+    ppd = by_name["ppd_compiled"]
+    assert ppd["num_draws"] == 1000
+    assert ppd["programs_compiled"] == 1
+    assert ppd["speedup_vs_loop"] >= 10.0
+    assert ppd["parity_abs_err"] < 1e-4
+    for name, x in by_name.items():
+        if "parity_abs_err" in x:
+            assert x["parity_abs_err"] < 1e-4, name

@@ -1,0 +1,313 @@
+"""Compiled query programs + the shared ProgramCache (the tentpole).
+
+Covers: cache mechanics (hit/miss/eviction/retrace counters), the
+posterior-predictive single-trace guarantee (no O(M) retraces, compiled
+AND eager), compiled-vs-eager parity for all four query kinds, the
+hardened query grammar, zero sampler-side recompiles on repeated
+``run_chains``, analysis-after-sampling cache reuse, and the batched
+query-serving path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as st
+
+from repro import model, observe, sample
+from repro.core.program import (CompiledProgram, ProgramCache, ProgramKey,
+                                data_fingerprint, model_fingerprint,
+                                program_cache)
+from repro.core.queries import parse_query, prepare_query, prob
+from repro.dists import InverseGamma, MvNormalDiag, Normal
+
+
+@model
+def linreg(X, y):
+    w = sample("w", MvNormalDiag(jnp.zeros(3), jnp.ones(3)))
+    s = sample("s", InverseGamma(2.0, 3.0))
+    observe("y", Normal(X @ w, jnp.sqrt(s)), y)
+
+
+def _data(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    return X, y
+
+
+# ---- ProgramCache mechanics ----------------------------------------------
+def test_cache_hit_miss_eviction_counters():
+    cache = ProgramCache(maxsize=2)
+    k1 = ProgramKey(("m", 1), "t", None, (), "fused", ())
+    k2 = ProgramKey(("m", 2), "t", None, (), "fused", ())
+    k3 = ProgramKey(("m", 3), "t", None, (), "fused", ())
+
+    p1 = cache.get_or_build(k1, lambda: CompiledProgram(k1, lambda x: x))
+    assert cache.get_or_build(k1, lambda: None) is p1  # hit, no rebuild
+    cache.get_or_build(k2, lambda: CompiledProgram(k2, lambda x: x))
+    cache.get_or_build(k3, lambda: CompiledProgram(k3, lambda x: x))
+
+    s = cache.stats()
+    assert s == {**s, "hits": 1, "misses": 3, "evictions": 1, "size": 2}
+    assert k1 not in cache  # LRU: k1 was oldest when k3 arrived
+    assert k2 in cache and k3 in cache
+
+
+def test_compiled_program_counts_calls_and_retraces():
+    key = ProgramKey(("m",), "t", None, (), "fused", ())
+    prog = CompiledProgram(key, lambda x: x * 2)
+    prog(jnp.ones(3))
+    prog(jnp.ones(3))
+    assert prog.calls == 2 and prog.retraces == 1  # same shape: one trace
+    prog(jnp.ones(5))
+    assert prog.retraces == 2  # new shape forces a retrace
+
+
+# ---- posterior predictive: single trace, no O(M) loop --------------------
+@pytest.mark.parametrize("compiled", [True, False],
+                         ids=["compiled", "eager"])
+def test_ppd_traces_do_not_scale_with_draws(compiled):
+    X, y = _data()
+
+    def counts_for(M):
+        traces = {"n": 0}
+
+        @model
+        def counted(X, y):
+            traces["n"] += 1
+            w = sample("w", MvNormalDiag(jnp.zeros(3), jnp.ones(3)))
+            s = sample("s", InverseGamma(2.0, 3.0))
+            observe("y", Normal(X @ w, jnp.sqrt(s)), y)
+
+        chain = {"w": np.zeros((M, 3), np.float32),
+                 "s": np.ones(M, np.float32)}
+        prob("X = Xn, y = yn | chain = c, model = m", compiled=compiled,
+             cache=ProgramCache(), Xn=X, yn=y, c=chain, m=counted)
+        return traces["n"]
+
+    small, large = counts_for(4), counts_for(400)
+    assert large == small, (
+        f"model traced {large} times for M=400 vs {small} for M=4 — "
+        "the posterior predictive is retracing per draw")
+    assert small <= 6  # a handful of discovery/jit traces, never O(M)
+
+
+def test_ppd_compiles_one_program_and_reuses_it():
+    X, y = _data()
+    cache = ProgramCache()
+    M = 1000
+    rng = np.random.default_rng(1)
+    spec = "X = Xn, y = yn | chain = c, model = m"
+    for i in range(4):  # fresh content each call, same shapes
+        chain = {"w": rng.normal(size=(M, 3)).astype(np.float32),
+                 "s": np.ones(M, np.float32)}
+        prob(spec, cache=cache, Xn=X, yn=y, c=chain, m=linreg)
+    s = cache.stats()
+    assert s["misses"] == 1, s   # exactly ONE program for all 4 calls
+    assert s["hits"] == 3, s
+    assert s["retraces"] == 1, s
+
+
+# ---- compiled vs eager parity (paper §3.5 examples + ppd) ----------------
+def test_parity_likelihood():
+    spec = ("X = jnp.array([[1.0, 2.0, 0.0]]), y = jnp.array([2.0]) "
+            "| w = w0, s = 1.0, model = m")
+    b = dict(w0=jnp.array([0.5, 0.0, 0.0]), m=linreg)
+    c = float(prob(spec, cache=ProgramCache(), **b))
+    e = float(prob(spec, compiled=False, **b))
+    np.testing.assert_allclose(c, e, rtol=1e-6)
+    np.testing.assert_allclose(c, st.norm(0.5, 1.0).logpdf(2.0), rtol=1e-5)
+
+
+def test_parity_prior():
+    X, y = _data()
+    spec = "w = jnp.array([1.0, 1.0, 0.0]), s = 1.0 | model = m"
+    b = dict(m=linreg(X, y))
+    c = float(prob(spec, cache=ProgramCache(), **b))
+    e = float(prob(spec, compiled=False, **b))
+    np.testing.assert_allclose(c, e, rtol=1e-6)
+
+
+def test_parity_joint():
+    spec = ("X = jnp.array([[1.0, 2.0, 0.0]]), y = jnp.array([2.0]), "
+            "w = jnp.array([0.0, 0.0, 0.0]), s = 1.0 | model = m")
+    c = float(prob(spec, cache=ProgramCache(), m=linreg))
+    e = float(prob(spec, compiled=False, m=linreg))
+    np.testing.assert_allclose(c, e, rtol=1e-6)
+
+
+def test_parity_posterior_predictive():
+    X, y = _data()
+    rng = np.random.default_rng(2)
+    chain = {"w": rng.normal(size=(64, 3)).astype(np.float32),
+             "s": np.exp(rng.normal(size=64)).astype(np.float32)}
+    spec = "X = Xn, y = yn | chain = c, model = m"
+    b = dict(Xn=X, yn=y, c=chain, m=linreg)
+    c = float(prob(spec, cache=ProgramCache(), **b))
+    e = float(prob(spec, compiled=False, **b))
+    np.testing.assert_allclose(c, e, rtol=1e-6)
+
+
+# ---- grammar hardening ---------------------------------------------------
+def test_bare_name_binds_keyword():
+    lhs, rhs = parse_query("w | model", {"w": 1.5, "model": linreg})
+    assert lhs == {"w": 1.5} and rhs["model"] is linreg
+
+
+def test_nested_brackets_and_parens_split_correctly():
+    lhs, _ = parse_query(
+        "X = jnp.array([[1.0, (2.0 + 1.0)], [0.0, 1.0]]) | model",
+        {"model": linreg})
+    np.testing.assert_allclose(np.asarray(lhs["X"]),
+                               [[1.0, 3.0], [0.0, 1.0]])
+
+
+@pytest.mark.parametrize("spec,bindings,needle", [
+    ("w = 1.0, model = m", {"m": linreg}, "must contain '|'"),
+    (" | model = m", {"m": linreg}, "empty lhs side"),
+    ("w = 1.0 | ", {}, "empty rhs side"),
+    ("w = 1.0, w = 2.0 | model = m", {"m": linreg}, "duplicate name 'w'"),
+    ("w | model = m", {"m": linreg}, "no keyword binding"),
+    ("w = v | model = m", {"m": linreg}, "unbound name 'v'"),
+    ("1bad = 1.0 | model = m", {"m": linreg}, "invalid name"),
+], ids=["no-pipe", "empty-lhs", "empty-rhs", "duplicate", "bare-unbound",
+        "expr-unbound", "bad-name"])
+def test_malformed_specs_raise_precise_errors(spec, bindings, needle):
+    with pytest.raises(ValueError) as ei:
+        parse_query(spec, bindings)
+    assert needle in str(ei.value), f"{ei.value} !~ {needle}"
+
+
+@pytest.mark.parametrize("expr", [
+    "__import__('os').system('true')",
+    "open('/etc/passwd')",
+    "(lambda: 1)()",
+    "[i for i in range(3)]",
+    "w.__class__",
+    "m.gen",
+], ids=["import", "open", "lambda", "comprehension", "dunder", "attr"])
+def test_restricted_evaluator_rejects(expr):
+    with pytest.raises(ValueError):
+        parse_query(f"w = {expr} | model = m", {"m": linreg, "w": 1.0})
+
+
+def test_evaluator_allows_np_jnp_calls():
+    lhs, _ = parse_query("w = jnp.ones(3) * np.float32(2.0) | model",
+                         {"model": linreg})
+    np.testing.assert_allclose(np.asarray(lhs["w"]), [2.0, 2.0, 2.0])
+
+
+def test_query_requires_model_binding():
+    with pytest.raises(ValueError, match="model"):
+        prob("w = 1.0 | s = 1.0", compiled=False)
+
+
+def test_chain_with_mismatched_draw_counts():
+    X, y = _data()
+    chain = {"w": np.zeros((5, 3)), "s": np.ones(4)}
+    with pytest.raises(ValueError, match="disagree on the number of draws"):
+        prob("X = Xn, y = yn | chain = c, model = m", compiled=False,
+             Xn=X, yn=y, c=chain, m=linreg)
+
+
+def test_query_names_missing_parameter_site():
+    X, y = _data()
+    with pytest.raises(ValueError, match="'s'"):
+        prob("w = jnp.zeros(3) | model = m", cache=ProgramCache(),
+             m=linreg(X, y))
+
+
+# ---- fingerprints --------------------------------------------------------
+def test_data_fingerprint_separates_content_and_rejects_tracers():
+    a = data_fingerprint(np.arange(4.0))
+    b = data_fingerprint(np.arange(4.0) + 1)
+    assert a != b
+
+    def fp_inside_trace(x):
+        data_fingerprint(x)
+        return x
+
+    with pytest.raises(ValueError, match="traced data"):
+        jax.jit(fp_inside_trace)(jnp.ones(3))
+
+
+def test_model_fingerprint_distinguishes_bound_data():
+    X, y = _data()
+    m1, m2 = linreg(X, y), linreg(X, y + 1)
+    assert model_fingerprint(m1) != model_fingerprint(m2)
+    assert model_fingerprint(m1) == model_fingerprint(linreg(X, y))
+
+
+# ---- sampler-side reuse --------------------------------------------------
+def test_repeated_run_chains_zero_recompiles():
+    from repro.infer import HMC, run_chains
+
+    X, y = _data(16)
+    m = linreg(X, y)
+    kernel = HMC(step_size=0.05, n_leapfrog=4, adapt_step_size=False)
+
+    def go(seed):
+        return run_chains(jax.random.PRNGKey(seed), m, kernel,
+                          num_samples=20, num_warmup=10, num_chains=2)
+
+    go(0)  # cold: compiles density/potential/chain programs
+    ch = go(1)  # identical spec, different key: everything cached
+    assert ch.health is not None
+    assert ch.health.cache_misses == 0, ch.health
+    assert ch.health.cache_retraces == 0, ch.health
+
+
+def test_analysis_after_sampling_adds_no_cache_misses():
+    from repro.infer import HMC
+
+    X, y = _data(16, seed=3)
+    m = linreg(X, y)
+    HMC(step_size=0.05, n_leapfrog=4).run(
+        jax.random.PRNGKey(0), m, num_samples=10, num_warmup=5)
+    before = program_cache().stats()
+    analysis = m.analyze()
+    after = program_cache().stats()
+    assert after["misses"] == before["misses"], (
+        "Model.analyze() after sampling forced a rebuild: "
+        f"{before} -> {after}")
+    assert after["hits"] > before["hits"]  # graph + potential replayed
+    assert analysis.ok
+
+
+def test_coverage_reports_queries_compiled():
+    X, y = _data(16, seed=4)
+    analysis = linreg(X, y).analyze()
+    qs = {q.kind: q for q in analysis.coverage.queries}
+    assert set(qs) == {"prior", "likelihood", "joint",
+                       "posterior_predictive"}
+    assert all(q.path == "compiled" for q in qs.values())
+    assert "queries:" in analysis.render()
+    d = analysis.to_dict()
+    assert {"kind": "joint", "path": "compiled", "reason": None} \
+        in d["queries"]
+
+
+# ---- serving -------------------------------------------------------------
+def test_query_server_batches_and_matches_direct():
+    from repro.launch.serve import QueryServer
+
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i in range(5):
+        X = rng.normal(size=(4, 3)).astype(np.float32)
+        yv = rng.normal(size=(4,)).astype(np.float32)
+        w = rng.normal(size=(3,)).astype(np.float32)
+        reqs.append(("X = Xn, y = yn | w = w0, s = 1.0, model = m",
+                     {"Xn": X, "yn": yv, "w0": w, "m": linreg}))
+    server = QueryServer(cache=ProgramCache())
+    out = server.serve(reqs)
+    assert len(out) == 5
+    for (spec, b), got in zip(reqs, out):
+        want = float(prob(spec, cache=ProgramCache(), **b))
+        np.testing.assert_allclose(float(got), want, rtol=1e-6)
+    st_ = server.stats
+    assert st_.requests == 5
+    assert st_.groups == 1           # one shared program key
+    assert st_.padded_lanes == 3     # 5 requests -> 8-lane bucket
+    assert st_.batches == 1
+    assert st_.latency_s > 0 and st_.throughput_qps > 0
