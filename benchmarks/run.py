@@ -14,6 +14,9 @@
   queries         — compiled (cached-program) vs eager probability
                     queries; posterior predictive as one jit(vmap) vs
                     the per-draw loop
+  sharding        — mesh-dispatched chains (chain-throughput scaling on
+                    forced multi-device CPU, subprocess per device
+                    count) + tall-data weak scaling of the psum density
 
 ``python -m benchmarks.run [--fast] [--only SECTION] [--chains N]
 [--json-dir DIR]`` (--fast cuts table1 to 200 iterations for quick
@@ -56,7 +59,7 @@ def main(argv=None) -> int:
     p.add_argument("--only", default=None,
                    choices=("table1", "typed_ablation", "kernels",
                             "leapfrog", "roofline", "multichain", "resume",
-                            "queries"))
+                            "queries", "sharding"))
     p.add_argument("--json-dir", default=None, metavar="DIR",
                    help="also write BENCH_*.json reports into DIR")
     p.add_argument("--chains", type=int, default=None, metavar="N",
@@ -84,6 +87,10 @@ def main(argv=None) -> int:
     if args.only in (None, "queries"):
         from benchmarks import queries_bench
         sections.append(("queries", queries_bench.run))
+    if args.only in (None, "sharding"):
+        from benchmarks import sharding_bench
+        sections.append(
+            ("sharding", lambda: sharding_bench.run(fast=args.fast)))
     if args.only == "multichain" or args.chains is not None:
         n = args.chains if args.chains is not None else 4
         sections.append(
@@ -124,6 +131,11 @@ def main(argv=None) -> int:
         if args.only in (None, "queries"):
             from benchmarks import queries_bench
             reporters.append(("BENCH_queries.json", queries_bench.report))
+        if args.only in (None, "sharding"):
+            from benchmarks import sharding_bench
+            reporters.append(
+                ("BENCH_sharding.json",
+                 lambda: sharding_bench.report(fast=args.fast)))
         for fname, reporter in reporters:
             path = os.path.join(args.json_dir, fname)
             try:

@@ -176,6 +176,15 @@ class ProgramKey(NamedTuple):
     extra : tuple
         Kind-specific hashable tail (context, kernel fingerprint, data
         shape signature, ...).
+    sharding : tuple
+        Device-placement fingerprint — ``()`` for the single-device
+        path, a :meth:`repro.sharding.ShardedRun.fingerprint` tuple
+        (mesh shape, axis names, sharded sites) for mesh-dispatched
+        programs. A sharded program bakes collective ops and per-shard
+        shapes into its HLO, so it must NEVER be served for an
+        unsharded call with an otherwise identical key (and vice
+        versa); making the placement part of the key is what guarantees
+        that.
     """
 
     model: Tuple
@@ -184,6 +193,7 @@ class ProgramKey(NamedTuple):
     batch: Tuple
     backend: str
     extra: Tuple = ()
+    sharding: Tuple = ()
 
 
 class CompiledProgram:

@@ -14,10 +14,11 @@ from repro.infer.hmc import HMC, DualAveraging
 from repro.infer.map_estimate import MAP
 from repro.infer.mh import RWMH
 from repro.infer.nuts import NUTS
-from repro.infer.sgld import SGLD, make_sgld_step
+from repro.infer.sgld import SGLD, make_sgld_step, make_subsampled_sgld_step
 
 __all__ = [
-    "HMC", "NUTS", "RWMH", "SGLD", "make_sgld_step", "ADVI", "ADVIResult",
+    "HMC", "NUTS", "RWMH", "SGLD", "make_sgld_step",
+    "make_subsampled_sgld_step", "ADVI", "ADVIResult",
     "MAP", "Chain", "ChainHealth", "TransitionKernel",
     "effective_sample_size", "package_draws", "run_chains", "run_segmented",
     "split_rhat", "DualAveraging",

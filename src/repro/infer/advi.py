@@ -7,7 +7,7 @@ MiniBatchContext for stochastic (minibatch) VI — the paper's §3.1 use case.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,12 @@ class ADVI:
     lr: float = 0.05
     num_steps: int = 1000
     backend: str = "fused"  # log-density backend (see make_logdensity_fn)
+    # subsampling spec (repro.sharding.Minibatch): each optimisation step
+    # draws ONE without-replacement index set and estimates the ELBO's
+    # log-joint term with the scaled-likelihood minibatch density — the
+    # index draw is shared across the num_mc reparameterised samples, so
+    # one step touches batch_size rows instead of the full dataset
+    minibatch: Optional[Any] = None
 
     def run(self, key, m: Model, ctx: Optional[Context] = None,
             init_varinfo: Optional[TypedVarInfo] = None) -> ADVIResult:
@@ -56,16 +62,40 @@ class ADVI:
                else m.typed_varinfo(k_init))
         assert_continuous_supports(tvi, "ADVI")
         tvi = tvi.link()
-        logdensity = density_program(m, tvi, ctx=ctx, backend=self.backend)
         dim = int(tvi.flat().shape[0])
 
-        def neg_elbo(params, key):
-            mu, log_sigma = params
-            eps = jax.random.normal(key, (self.num_mc, dim))
-            u = mu + jnp.exp(log_sigma) * eps
-            lps = jax.vmap(logdensity.raw)(u)
-            entropy = jnp.sum(log_sigma) + 0.5 * dim * (1.0 + jnp.log(2 * jnp.pi))
-            return -(jnp.mean(lps) + entropy)
+        if self.minibatch is not None:
+            if ctx is not None:
+                raise ValueError(
+                    "ADVI(minibatch=...) owns the evaluation context "
+                    "(MiniBatchContext with scale=N/B); pass ctx=None")
+            from repro.sharding.minibatch import make_minibatch_logdensity
+            est = make_minibatch_logdensity(m, tvi, self.minibatch,
+                                            backend=self.backend)
+
+            def neg_elbo(params, key):
+                mu, log_sigma = params
+                k_eps, k_idx = jax.random.split(key)
+                eps = jax.random.normal(k_eps, (self.num_mc, dim))
+                u = mu + jnp.exp(log_sigma) * eps
+                idx = est.draw_indices(k_idx)
+                lps = jax.vmap(
+                    lambda uu: est.logdensity_at_indices(uu, idx))(u)
+                entropy = jnp.sum(log_sigma) \
+                    + 0.5 * dim * (1.0 + jnp.log(2 * jnp.pi))
+                return -(jnp.mean(lps) + entropy)
+        else:
+            logdensity = density_program(m, tvi, ctx=ctx,
+                                         backend=self.backend)
+
+            def neg_elbo(params, key):
+                mu, log_sigma = params
+                eps = jax.random.normal(key, (self.num_mc, dim))
+                u = mu + jnp.exp(log_sigma) * eps
+                lps = jax.vmap(logdensity.raw)(u)
+                entropy = jnp.sum(log_sigma) \
+                    + 0.5 * dim * (1.0 + jnp.log(2 * jnp.pi))
+                return -(jnp.mean(lps) + entropy)
 
         opt = adam(self.lr)
         # Stan-style ADVI init: zero mean, unit-ish scale in UNCONSTRAINED space
@@ -85,7 +115,9 @@ class ADVI:
             model_fingerprint(m), "advi_step", tvi.layout, (),
             self.backend,
             (ctx if ctx is not None else DefaultContext(),
-             int(self.num_mc), float(self.lr)))
+             int(self.num_mc), float(self.lr),
+             self.minibatch.fingerprint()
+             if self.minibatch is not None else ()))
         step = cache.get_or_build(
             step_key, lambda: CompiledProgram(step_key, raw_step))
 

@@ -318,9 +318,138 @@ def setup_chain_driver(key, model, kernel, *, num_chains: int,
     return tvi, kern, dim, q0s, chain_keys
 
 
+def _chain_body(kern, num_warmup: int, num_samples: int):
+    """The per-chain warmup+sampling scan both drivers vmap.
+
+    Key derivation (``fold_in(chain_key, 1|2)`` then ``split``) is THE
+    shared contract with the segmented driver's presplit key blocks — do
+    not change one without the other.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def one_chain(ckey, q0):
+        state = kern.init(q0)
+        if num_warmup > 0:
+            wkeys = jax.random.split(jax.random.fold_in(ckey, 1), num_warmup)
+            ts = jnp.arange(num_warmup, dtype=jnp.float32)
+
+            def warm_body(s, inp):
+                t, k = inp
+                return kern.warm(s, t, k), None
+
+            state, _ = jax.lax.scan(warm_body, state, (ts, wkeys))
+            # freeze adapted quantities only when adaptation actually ran:
+            # dual-averaging's smoothed iterate starts at exp(0)=1.0, which
+            # would silently replace the configured step size otherwise
+            state = kern.finalize(state)
+        skeys = jax.random.split(jax.random.fold_in(ckey, 2), num_samples)
+        _, outs = jax.lax.scan(kern.step, state, skeys)
+        return outs
+
+    return one_chain
+
+
+def _sharded_chain_outs(plan, model, tvi, kernel, dim: int, num_warmup: int,
+                        num_samples: int, backend: str, chain_keys, q0s,
+                        cache):
+    """chains × data mesh program: shard_map(vmap(chain)) with the
+    likelihood psum folded into the per-device fused log-joint.
+
+    The transition kernel is REBUILT inside the mapped function from a
+    density that binds this device's data shard — so each device runs
+    one compiled per-shard program, and the only collective per leapfrog
+    step is the scalar likelihood all-reduce (plus its transpose in the
+    gradient). The fused-integrator PotentialSpec path is skipped here:
+    a spec is compiled against the full-data density and cannot absorb
+    the collective, so the mesh path uses the autodiff integrator over
+    the fused density backend.
+    """
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.contexts import LikelihoodContext, PriorContext
+    from repro.core.program import (CompiledProgram, ProgramKey,
+                                    kernel_fingerprint, model_fingerprint)
+    from repro.kernels.fused_logpdf.ops import all_reduce_block_sum
+    from repro.sharding.data_parallel import sharded_arrays
+
+    sites = plan.shard_sites
+    shards = sharded_arrays(model, plan)
+
+    def local_run(ckeys, local_q0s, *local_data):
+        mm = model.bind(**dict(zip(sites, local_data)))
+
+        def _prior(flat_u):
+            return mm.logp_with_context(tvi.replace_flat(flat_u),
+                                        PriorContext(), backend=backend)
+
+        def _lik(flat_u):
+            return mm.logp_with_context(tvi.replace_flat(flat_u),
+                                        LikelihoodContext(), backend=backend)
+
+        # The gradient must be taken INSIDE the mesh program (the kernel
+        # differentiates the density per leapfrog step), and there the
+        # naive grad of ``prior + psum(lik)`` is WRONG: psum's transpose
+        # hands each device its own cotangent without re-summing, so a
+        # chain would move along only its local shard's likelihood
+        # gradient. custom_vjp restores the math — the backward pass
+        # all-reduces the likelihood gradient exactly like the forward
+        # all-reduces the likelihood value. (grad taken OUTSIDE a
+        # shard_map — e.g. make_sharded_logdensity().raw — doesn't need
+        # this: the shard_map boundary transposes replicated inputs
+        # correctly.)
+        @jax.custom_vjp
+        def logdensity(flat_u):
+            return _prior(flat_u) + all_reduce_block_sum(
+                _lik(flat_u), plan.data_axis)
+
+        def _ld_fwd(flat_u):
+            val = _prior(flat_u) + all_reduce_block_sum(
+                _lik(flat_u), plan.data_axis)
+            return val, flat_u
+
+        def _ld_bwd(flat_u, g):
+            gp = jax.grad(_prior)(flat_u)
+            gl = all_reduce_block_sum(jax.grad(_lik)(flat_u),
+                                      plan.data_axis)
+            return (g * (gp + gl),)
+
+        logdensity.defvjp(_ld_fwd, _ld_bwd)
+
+        kern = kernel.make_kernel(logdensity, dim)
+        body = _chain_body(kern, num_warmup, num_samples)
+        return jax.vmap(body)(ckeys, local_q0s)
+
+    mapped = shard_map(
+        local_run, mesh=plan.mesh,
+        in_specs=(P(plan.chain_axis), P(plan.chain_axis))
+        + (P(plan.data_axis),) * len(sites),
+        out_specs=P(plan.chain_axis), check_rep=False)
+
+    csh = plan.chain_sharding()
+    chain_keys = jax.device_put(chain_keys, csh)
+    q0s = jax.device_put(q0s, csh)
+
+    kfp = kernel_fingerprint(kernel)
+    if kfp is None:
+        return jax.jit(mapped)(chain_keys, q0s, *shards)
+    num_chains = int(q0s.shape[0])
+    pkey = ProgramKey(
+        model_fingerprint(model), "chain", tvi.layout,
+        (num_chains, num_warmup, num_samples), backend,
+        (kfp,), plan.fingerprint())
+    prog = cache.get_or_build(
+        pkey, lambda: CompiledProgram(
+            pkey, lambda ks, qs, *sh: mapped(ks, qs, *sh)))
+    return prog(chain_keys, q0s, *shards)
+
+
 def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
                num_chains: int = 4, init_varinfo=None, init_jitter: float = 1.0,
-               backend: str = "fused", checkpoint_dir: Optional[str] = None,
+               backend: str = "fused", mesh=None,
+               checkpoint_dir: Optional[str] = None,
                checkpoint_every: Optional[int] = None, checkpoint_keep: int = 3,
                preemption=None, fallback: bool = True) -> Chain:
     """Run ``num_chains`` MCMC chains as ONE vmap-compiled program.
@@ -353,6 +482,18 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         meaningful). ``0.0`` starts every chain at the same point.
     backend : {"fused", "reference"}
         Log-density backend (see ``Model.make_logdensity_fn``).
+    mesh : ShardedRun or jax.sharding.Mesh, optional
+        Device-mesh placement plan (``repro.sharding.ShardedRun``). With
+        a non-trivial chains axis the fleet is partitioned across the
+        mesh's ``chains`` devices; with ``data`` shards > 1 the plan's
+        ``shard_sites`` arrays are partitioned along their leading axis
+        and the likelihood is all-reduced with one ``psum`` inside the
+        fused log-joint (the PotentialSpec fused integrator is skipped
+        on that path). A trivial (one-device) plan or ``None`` keeps the
+        single-device vmap path byte-for-byte. ``num_chains`` must be
+        divisible by the chains-axis size. Composes with checkpointing
+        for chains-only plans; data sharding + checkpointing is not
+        supported.
     checkpoint_dir : str, optional
         Directory for atomic keep-N ``RunState`` snapshots. Setting it
         (or ``checkpoint_every`` / ``preemption``) switches to the
@@ -383,7 +524,13 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         diverging, ...); ``health`` carries the ``ChainHealth`` report.
     """
     import jax
-    import jax.numpy as jnp
+
+    from repro.sharding.mesh import ShardedRun
+    plan = ShardedRun.normalize(mesh)
+    if plan is not None and plan.is_trivial:
+        plan = None  # graceful degradation: one device == no mesh
+    if plan is not None:
+        plan.validate_chains(num_chains)
 
     if (checkpoint_dir is not None or checkpoint_every is not None
             or preemption is not None):
@@ -391,7 +538,7 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         return run_segmented(
             key, model, kernel, num_samples, num_warmup=num_warmup,
             num_chains=num_chains, init_varinfo=init_varinfo,
-            init_jitter=init_jitter, backend=backend,
+            init_jitter=init_jitter, backend=backend, mesh=plan,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             checkpoint_keep=checkpoint_keep, preemption=preemption,
             fallback=fallback)
@@ -406,43 +553,42 @@ def run_chains(key, model, kernel, num_samples: int, *, num_warmup: int = 0,
         key, model, kernel, num_chains=num_chains, init_varinfo=init_varinfo,
         init_jitter=init_jitter, backend=backend)
 
-    def one_chain(ckey, q0):
-        state = kern.init(q0)
-        if num_warmup > 0:
-            wkeys = jax.random.split(jax.random.fold_in(ckey, 1), num_warmup)
-            ts = jnp.arange(num_warmup, dtype=jnp.float32)
-
-            def warm_body(s, inp):
-                t, k = inp
-                return kern.warm(s, t, k), None
-
-            state, _ = jax.lax.scan(warm_body, state, (ts, wkeys))
-            # freeze adapted quantities only when adaptation actually ran:
-            # dual-averaging's smoothed iterate starts at exp(0)=1.0, which
-            # would silently replace the configured step size otherwise
-            state = kern.finalize(state)
-        skeys = jax.random.split(jax.random.fold_in(ckey, 2), num_samples)
-        _, outs = jax.lax.scan(kern.step, state, skeys)
-        return outs
-
-    # the WHOLE vmapped chain program is cached — jit keys on function
-    # identity, so without this every run_chains call would re-trace even
-    # though density/spec were reused. Keyed on the sampler's full config
-    # fingerprint; a non-dataclass kernel cannot be fingerprinted safely
-    # and bypasses the cache.
-    kfp = kernel_fingerprint(kernel)
-    if kfp is not None:
-        ckey_prog = ProgramKey(
-            model_fingerprint(model), "chain", tvi.layout,
-            (num_chains, num_warmup, num_samples), backend,
-            (kfp, float(init_jitter)))
-        prog = cache.get_or_build(
-            ckey_prog,
-            lambda: CompiledProgram(
-                ckey_prog, lambda ks, qs: jax.vmap(one_chain)(ks, qs)))
-        outs = prog(chain_keys, q0s)
+    if plan is not None and plan.num_data_shards > 1:
+        # chains x data mesh program (likelihood psum inside the density)
+        outs = _sharded_chain_outs(
+            plan, model, tvi, kernel, dim, num_warmup, num_samples,
+            backend, chain_keys, q0s, cache)
     else:
-        outs = jax.jit(jax.vmap(one_chain))(chain_keys, q0s)
+        if plan is not None:
+            # chains-only placement: the SAME per-chain math, with the
+            # fleet inputs laid over the mesh's chain devices — input
+            # shardings propagate through jit(vmap), so each device runs
+            # its block of chains and nothing crosses devices
+            csh = plan.chain_sharding()
+            chain_keys = jax.device_put(chain_keys, csh)
+            q0s = jax.device_put(q0s, csh)
+        one_chain = _chain_body(kern, num_warmup, num_samples)
+
+        # the WHOLE vmapped chain program is cached — jit keys on function
+        # identity, so without this every run_chains call would re-trace
+        # even though density/spec were reused. Keyed on the sampler's full
+        # config fingerprint (+ the mesh placement fingerprint: a sharded
+        # executable must never be served unsharded); a non-dataclass
+        # kernel cannot be fingerprinted safely and bypasses the cache.
+        kfp = kernel_fingerprint(kernel)
+        if kfp is not None:
+            ckey_prog = ProgramKey(
+                model_fingerprint(model), "chain", tvi.layout,
+                (num_chains, num_warmup, num_samples), backend,
+                (kfp, float(init_jitter)),
+                plan.fingerprint() if plan is not None else ())
+            prog = cache.get_or_build(
+                ckey_prog,
+                lambda: CompiledProgram(
+                    ckey_prog, lambda ks, qs: jax.vmap(one_chain)(ks, qs)))
+            outs = prog(chain_keys, q0s)
+        else:
+            outs = jax.jit(jax.vmap(one_chain))(chain_keys, q0s)
     qs = outs.pop("q")
     chain = package_draws(tvi, qs, stats=outs)
     from repro.infer.driver import health_from_stats

@@ -234,7 +234,8 @@ def _check_meta(saved: Dict, want: Dict, directory: str) -> None:
 def run_segmented(key, model, sampler, num_samples: int, *,
                   num_warmup: int = 0, num_chains: int = 4,
                   init_varinfo=None, init_jitter: float = 1.0,
-                  backend: str = "fused", checkpoint_dir: Optional[str] = None,
+                  backend: str = "fused", mesh=None,
+                  checkpoint_dir: Optional[str] = None,
                   checkpoint_every: Optional[int] = None,
                   checkpoint_keep: int = 3, preemption=None,
                   fallback: bool = True, stuck_accept: float = 1e-3,
@@ -244,6 +245,18 @@ def run_segmented(key, model, sampler, num_samples: int, *,
     See the module docstring for the contract. Normally reached through
     ``repro.infer.run_chains(..., checkpoint_dir=..., checkpoint_every=
     ...)`` rather than called directly.
+
+    ``mesh`` (a ``repro.sharding.ShardedRun``) dispatches the chain
+    fleet across the plan's ``chains`` devices: the per-chain kernel
+    state and presplit key slices are laid over the mesh, and the
+    placement propagates through every segment program. Because the
+    per-chain math and key derivation are untouched, a sharded
+    segmented run — including interrupt + resume — stays bit-exact
+    against the single-device one, and checkpoints are placement-
+    agnostic (a run snapshotted under a mesh can resume without one and
+    vice versa; the meta check deliberately excludes placement).
+    Data-parallel plans (``data`` shards > 1) are not supported here —
+    use the single-scan driver for those.
     """
     import jax
     import jax.numpy as jnp
@@ -254,6 +267,18 @@ def run_segmented(key, model, sampler, num_samples: int, *,
     seg = int(checkpoint_every) if checkpoint_every else max(1, total // 10)
     if seg <= 0:
         raise ValueError("checkpoint_every must be positive")
+
+    from repro.sharding.mesh import ShardedRun
+    plan = ShardedRun.normalize(mesh)
+    if plan is not None and plan.is_trivial:
+        plan = None
+    if plan is not None:
+        if plan.num_data_shards > 1:
+            raise ValueError(
+                "the segmented driver shards chains only; data-parallel "
+                "plans (data shards > 1) require the single-scan "
+                "run_chains path (checkpointing disabled)")
+        plan.validate_chains(num_chains)
 
     from repro.core.program import (ProgramKey, kernel_fingerprint,
                                     model_fingerprint, program_cache)
@@ -332,11 +357,21 @@ def run_segmented(key, model, sampler, num_samples: int, *,
     kfp = kernel_fingerprint(sampler)
     if kfp is not None:
         seg_key = ProgramKey(model_fingerprint(model), "segment_fns",
-                             tvi.layout, (), backend, (kfp, "primary"))
+                             tvi.layout, (), backend, (kfp, "primary"),
+                             plan.fingerprint() if plan is not None else ())
         fns = cache.get_or_build(seg_key, lambda: _segment_fns(kern))
     else:
         fns = _segment_fns(kern)
     init_fn, warm_fn, samp_fn, final_fn = fns
+
+    # chains-only mesh placement: lay the fleet inputs over the chain
+    # devices once; the sharding then propagates through init and every
+    # segment program (the carry keeps its placement across segments)
+    _shard_keys = lambda a: a  # noqa: E731 - identity off-mesh
+    if plan is not None:
+        csh = plan.chain_sharding()
+        q0s = jax.device_put(q0s, csh)
+        _shard_keys = lambda a: jax.device_put(jnp.asarray(a), csh)  # noqa: E731
     state = init_fn(q0s)
 
     # preallocate full-run draw/stat buffers from the step's out spec
@@ -458,25 +493,26 @@ def run_segmented(key, model, sampler, num_samples: int, *,
                 ts = np.broadcast_to(
                     np.arange(it, end, dtype=np.float32),
                     (num_chains, end - it))
-                state, badv = warm_fn(state, ts, wkeys[:, it:end])
+                wk = _shard_keys(wkeys[:, it:end])
+                state, badv = warm_fn(state, ts, wk)
                 bad = np.asarray(badv)
                 if bad.any():
                     counters["nonfinite"] += bad.astype(np.int64)
                     rf = _get_ref_fns() if fallback else False
                     if rf:
-                        state, _ = rf[1](prev_state, ts, wkeys[:, it:end])
+                        state, _ = rf[1](prev_state, ts, wk)
                         counters["fallbacks"] = counters["fallbacks"] + 1
             else:
                 d0, d1 = it - num_warmup, end - num_warmup
-                state, outs, summ = samp_fn(state, skeys[:, d0:d1])
+                sk = _shard_keys(skeys[:, d0:d1])
+                state, outs, summ = samp_fn(state, sk)
                 summ = jax.device_get(summ)
                 bad = np.asarray(summ["bad"])
                 if bad.any():
                     counters["nonfinite"] += bad.astype(np.int64)
                     rf = _get_ref_fns() if fallback else False
                     if rf:
-                        state, outs, summ = rf[2](prev_state,
-                                                  skeys[:, d0:d1])
+                        state, outs, summ = rf[2](prev_state, sk)
                         summ = jax.device_get(summ)
                         counters["fallbacks"] = counters["fallbacks"] + 1
                 pending.append((d0, d1, outs))

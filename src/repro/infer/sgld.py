@@ -21,7 +21,7 @@ from repro.core.model import Model
 from repro.core.program import (CompiledProgram, ProgramKey,
                                 model_fingerprint, program_cache)
 
-__all__ = ["SGLD", "make_sgld_step"]
+__all__ = ["SGLD", "make_sgld_step", "make_subsampled_sgld_step"]
 
 
 def _struct_sig(tree) -> Tuple:
@@ -115,5 +115,74 @@ def make_sgld_step(m: Model, scale: float, sgld: Optional[SGLD] = None,
         prog = cache.get_or_build(
             pkey, lambda: CompiledProgram(pkey, raw_step))
         return prog(key, params, state, dict(batch))
+
+    return step
+
+
+def make_subsampled_sgld_step(m: Model, minibatch,
+                              sgld: Optional[SGLD] = None,
+                              param_site: str = "params",
+                              backend: str = "fused") -> Callable:
+    """SGLD step with the minibatch drawn INSIDE the step (self-batching).
+
+    ``make_sgld_step`` expects the caller to hand it a batch; this
+    variant owns the subsampling instead: each call splits its key into
+    (index draw, Langevin noise), takes a without-replacement
+    ``minibatch.batch_size``-row sample of the bound
+    ``minibatch.sites`` arrays, and evaluates the scaled-likelihood
+    log-joint under ``MiniBatchContext(scale=N/B)`` — the estimator of
+    :mod:`repro.sharding.minibatch`, so the stochastic gradient is
+    unbiased for the full-data log-joint.
+
+    ``minibatch`` is a :class:`repro.sharding.Minibatch`. The returned
+    ``step(key, params, state) -> (params, state, logp_hat)`` is one
+    cached jitted program (kind ``"sgld_step"``, subsampled flavour).
+    """
+    import numpy as np
+
+    from repro.sharding.minibatch import Minibatch
+
+    if not isinstance(minibatch, Minibatch):
+        raise TypeError("minibatch must be a repro.sharding.Minibatch, "
+                        f"got {type(minibatch).__name__}")
+    sgld = sgld if sgld is not None else SGLD()
+    full = {}
+    ns = []
+    for site in minibatch.sites:
+        if site not in m.data:
+            raise ValueError(f"minibatch site '{site}' is not bound data "
+                             f"of model '{m.name}'")
+        full[site] = jnp.asarray(np.asarray(m.data[site]))
+        ns.append(int(full[site].shape[0]))
+    if len(set(ns)) != 1:
+        raise ValueError(f"minibatch sites have unequal leading dims {ns}")
+    n_total = ns[0]
+    scale = n_total / minibatch.batch_size
+    ctx = MiniBatchContext(scale=scale)
+    cache = program_cache()
+    mfp = model_fingerprint(m)
+
+    def raw_step(key, params, state):
+        k_idx, k_noise = jax.random.split(key)
+        idx = jax.random.choice(k_idx, n_total, (minibatch.batch_size,),
+                                replace=False)
+        batch = {s: jnp.take(v, idx, axis=0) for s, v in full.items()}
+
+        def logjoint(p):
+            mm = m.bind(**batch)
+            return mm.logp_with_context({param_site: p}, ctx, backend=backend)
+
+        logp, grads = jax.value_and_grad(logjoint)(params)
+        params, state = sgld.step(k_noise, params, grads, state)
+        return params, state, logp
+
+    def step(key, params, state):
+        pkey = ProgramKey(
+            mfp, "sgld_step", None, (), backend,
+            ("subsampled", minibatch.fingerprint(), sgld, param_site,
+             _struct_sig(params), _struct_sig(state)))
+        prog = cache.get_or_build(
+            pkey, lambda: CompiledProgram(pkey, raw_step))
+        return prog(key, params, state)
 
     return step

@@ -27,7 +27,25 @@ __all__ = ["normal_logpdf_sum", "std_normal_logpdf_sum",
            "bernoulli_logits_logpmf_sum", "categorical_logits_logpmf_sum",
            "gamma_unnorm_logpdf_sum", "beta_unnorm_logpdf_sum",
            "student_t_unnorm_logpdf_sum", "mvnormal_prec_quadform_sum",
-           "site_block_sum", "SITE_BLOCK_FAMILIES"]
+           "site_block_sum", "all_reduce_block_sum", "SITE_BLOCK_FAMILIES"]
+
+
+def all_reduce_block_sum(total: jax.Array, axis_name=None) -> jax.Array:
+    """All-reduce seam between the fused block reductions and the mesh.
+
+    ``site_block_sum`` reduces each family's site blocks to one scalar
+    per device; when those blocks were cut from data sharded over a mesh
+    axis (``repro.sharding.data_parallel``), the device-local partial
+    sums are combined here with ONE ``psum`` over ``axis_name``. With no
+    axis name this is the identity, so single-device callers pay
+    nothing. Kept next to the kernels because this is where a fused
+    cross-device reduction (reduce-scatter into the block kernels) would
+    slot in; today it is a single collective over the already-reduced
+    scalars, which is optimal for scalar log-densities.
+    """
+    if axis_name is None:
+        return total
+    return jax.lax.psum(total, axis_name)
 
 
 def _auto_interpret() -> bool:

@@ -24,10 +24,20 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.sharding.data_parallel import (make_sharded_logdensity,
+                                          shard_slices, sharded_arrays)
+from repro.sharding.mesh import ShardedRun
+from repro.sharding.minibatch import (Minibatch, MinibatchLogDensity,
+                                      make_minibatch_logdensity)
+
 __all__ = ["Rules", "spec", "constrain", "use_rules", "active_rules",
            "DEFAULT_RULES", "LONG_DECODE_RULES", "named_sharding",
            "param_spec_for", "param_shardings", "FSDP_MIN_SIZE",
-           "fit_spec", "axes_size"]
+           "fit_spec", "axes_size",
+           # inference mesh layer (chains x data)
+           "ShardedRun", "make_sharded_logdensity", "shard_slices",
+           "sharded_arrays", "Minibatch", "MinibatchLogDensity",
+           "make_minibatch_logdensity"]
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 

@@ -1,0 +1,172 @@
+"""ShardedRun — the chains × data device-mesh plan for inference.
+
+A :class:`ShardedRun` fixes, once per run, how a chain fleet and its
+observed data are laid over a :class:`jax.sharding.Mesh`:
+
+* the ``chains`` mesh axis partitions the leading chain axis of the
+  per-chain PRNG keys / initial positions / kernel states, so a fleet of
+  N chains runs as ``num_chain_devices`` independent device-local vmaps;
+* the ``data`` mesh axis partitions the leading (observation) axis of
+  the ``shard_sites`` data arrays, so the likelihood term of the fused
+  log-joint is evaluated per shard and combined with one ``psum``
+  all-reduce (see :mod:`repro.sharding.data_parallel`).
+
+The plan is deliberately tiny and value-complete: everything inference
+needs to key a compiled program on — mesh shape, axis names, sharded
+sites — is in :meth:`fingerprint`, which is what the ``ProgramKey``
+``sharding`` component stores. With one device the plan degenerates to
+:attr:`is_trivial` and every consumer falls back to the single-device
+vmap path unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ShardedRun"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedRun:
+    """A chains × data placement plan over a device mesh.
+
+    Attributes
+    ----------
+    mesh : jax.sharding.Mesh
+        Two-axis device mesh ``(chain_axis, data_axis)``. Build one with
+        :meth:`plan` unless you already have a mesh.
+    chain_axis, data_axis : str
+        Mesh axis names (defaults ``"chains"`` / ``"data"``).
+    shard_sites : tuple of str
+        Names of bound-data arrays to partition along their leading axis
+        over ``data_axis``. Empty means chains-only sharding (every
+        device holds the full data).
+    """
+
+    mesh: "object"
+    chain_axis: str = "chains"
+    data_axis: str = "data"
+    shard_sites: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        names = tuple(self.mesh.axis_names)
+        for ax in (self.chain_axis, self.data_axis):
+            if ax not in names:
+                raise ValueError(
+                    f"mesh axes {names} do not include '{ax}'; a ShardedRun "
+                    f"mesh needs both '{self.chain_axis}' and "
+                    f"'{self.data_axis}' axes (size 1 is fine)")
+        object.__setattr__(self, "shard_sites",
+                           tuple(str(s) for s in self.shard_sites))
+        if self.num_data_shards > 1 and not self.shard_sites:
+            raise ValueError(
+                f"mesh has {self.num_data_shards} '{self.data_axis}' shards "
+                "but shard_sites is empty — name the observed arrays to "
+                "partition, or use a data axis of size 1")
+
+    # -- factories ---------------------------------------------------------
+    @classmethod
+    def plan(cls, *, data_shards: int = 1, devices: Optional[Sequence] = None,
+             chain_axis: str = "chains", data_axis: str = "data",
+             shard_sites: Sequence[str] = ()) -> "ShardedRun":
+        """Lay all (or the given) devices out as chains × data.
+
+        ``data_shards`` devices go to the data axis; every remaining
+        device goes to the chain axis. With one device this yields the
+        trivial 1×1 mesh and inference stays on the single-device path.
+        """
+        import jax
+        from jax.sharding import Mesh
+
+        devs = list(devices) if devices is not None else list(jax.devices())
+        n = len(devs)
+        data_shards = int(data_shards)
+        if data_shards < 1:
+            raise ValueError("data_shards must be >= 1")
+        if n % data_shards != 0:
+            raise ValueError(
+                f"{n} devices cannot be split into {data_shards} data "
+                "shards; device count must be divisible by data_shards")
+        grid = np.asarray(devs).reshape(n // data_shards, data_shards)
+        return cls(Mesh(grid, (chain_axis, data_axis)),
+                   chain_axis=chain_axis, data_axis=data_axis,
+                   shard_sites=tuple(shard_sites))
+
+    @classmethod
+    def normalize(cls, mesh) -> Optional["ShardedRun"]:
+        """Coerce a ``mesh=`` argument: None, a ShardedRun, or a raw
+        jax ``Mesh`` (wrapped chains-only; a present 'data' axis of size
+        >1 without shard_sites is rejected by ``__post_init__``)."""
+        if mesh is None:
+            return None
+        if isinstance(mesh, cls):
+            return mesh
+        names = tuple(getattr(mesh, "axis_names", ()))
+        if not names:
+            raise TypeError(f"mesh must be a ShardedRun or jax Mesh, "
+                            f"got {type(mesh).__name__}")
+        chain_axis = names[0]
+        if len(names) == 1:
+            # single-axis mesh: reshape onto a (chains, 1) grid
+            return cls.plan(devices=mesh.devices.reshape(-1),
+                            chain_axis=chain_axis)
+        return cls(mesh, chain_axis=chain_axis, data_axis=names[1])
+
+    # -- geometry ----------------------------------------------------------
+    def _axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names,
+                        self.mesh.devices.shape))[name]
+
+    @property
+    def num_chain_devices(self) -> int:
+        return self._axis_size(self.chain_axis)
+
+    @property
+    def num_data_shards(self) -> int:
+        return self._axis_size(self.data_axis)
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.prod(self.mesh.devices.shape))
+
+    @property
+    def is_trivial(self) -> bool:
+        """One device total: consumers use the plain single-device path."""
+        return self.num_devices == 1
+
+    def validate_chains(self, num_chains: int) -> None:
+        if num_chains % self.num_chain_devices != 0:
+            raise ValueError(
+                f"num_chains={num_chains} is not divisible by the "
+                f"{self.num_chain_devices}-device '{self.chain_axis}' mesh "
+                "axis; pad the fleet or shrink the axis")
+
+    # -- shardings ---------------------------------------------------------
+    def chain_sharding(self):
+        """NamedSharding partitioning a leading chain axis (rest replicated)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec(self.chain_axis))
+
+    def data_sharding(self):
+        """NamedSharding partitioning a leading observation axis."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec(self.data_axis))
+
+    # -- identity ----------------------------------------------------------
+    def fingerprint(self) -> Tuple:
+        """Hashable placement identity for ``ProgramKey.sharding``.
+
+        Mesh shape + axis names + sharded sites: everything that changes
+        the compiled HLO (collective ops, per-shard shapes). Device ids
+        are deliberately NOT included — the same plan on a different set
+        of equivalent devices reuses the program.
+        """
+        return ("mesh", tuple(self.mesh.devices.shape),
+                (self.chain_axis, self.data_axis), self.shard_sites)
+
+    def __repr__(self):
+        return (f"ShardedRun({self.chain_axis}={self.num_chain_devices} x "
+                f"{self.data_axis}={self.num_data_shards}, "
+                f"shard_sites={list(self.shard_sites)})")

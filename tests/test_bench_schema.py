@@ -83,7 +83,8 @@ def test_roofline_report_schema_valid():
 @pytest.mark.parametrize("fname", ["BENCH_leapfrog.json",
                                    "BENCH_logjoint.json",
                                    "BENCH_roofline.json",
-                                   "BENCH_queries.json"])
+                                   "BENCH_queries.json",
+                                   "BENCH_sharding.json"])
 def test_committed_baselines_schema_valid(fname):
     path = os.path.join(REPO_ROOT, fname)
     assert os.path.exists(path), f"{fname} baseline not committed"
@@ -101,6 +102,26 @@ def test_committed_leapfrog_baseline_records_speedup():
         if x.get("supported") and "max_err_q" in x:
             assert x["max_err_q"] < 1e-5, name
             assert x["rel_err_logp"] < 1e-5, name
+
+
+def test_committed_sharding_baseline_records_scaling():
+    """The acceptance record for the mesh layer: chain-throughput scaling
+    >= 1.5x at 4 forced devices vs 1 (per-device projection — forced CPU
+    devices share one physical core, so the honest headline is the
+    per-device program time; the measured host-serialized mesh wall-clock
+    is recorded alongside) and the sharded density matching the
+    unsharded one to float32 roundoff."""
+    rep = read_report(os.path.join(REPO_ROOT, "BENCH_sharding.json"))
+    by_name = {e["name"]: e["extra"] for e in rep["entries"]}
+    sc = by_name["sharding/chains_throughput_scaling"]
+    assert sc["scaling"] >= 1.5
+    assert sc["devices"] == 4
+    assert sc["method"] == "projected_per_device"
+    assert sc["wall_mesh_measured_s"] > 0  # the mesh program really ran
+    wd = by_name["sharding/weakdata_density_grad"]
+    assert wd["parity_rel_err"] <= 1e-6
+    assert wd["grad_rel_err"] <= 1e-4
+    assert wd["weak_scaling"] >= 1.5
 
 
 def test_committed_queries_baseline_records_speedup():

@@ -1,4 +1,17 @@
-"""Inference algorithms: statistical correctness on known posteriors."""
+"""Inference algorithms: statistical correctness on known posteriors.
+
+Tolerance policy (applies to every moment assertion in this file):
+seeds are FIXED, so each test is deterministic on a given jax/XLA build —
+but XLA is free to re-tile reductions across versions, backends, and
+device placements, which reseeds the float noise and effectively redraws
+the chain. Every tolerance is therefore set at >= 4 Monte-Carlo standard
+errors of the checked statistic under a CONSERVATIVE effective-sample-
+size estimate (ESS ~ num_samples/5 for adapted HMC/NUTS, ~num_samples/40
+for RWMH), giving a per-assertion failure probability < ~1e-4 under a
+re-draw; the estimate used is documented at each assertion. Determinism
+tests (same key, same program => same draws) live in test_resume.py /
+test_sharded_chains.py and assert exact equality instead.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,8 +43,13 @@ def test_hmc_posterior_moments(gauss_model):
     # where every fixed-step trajectory diverges and is rejected)
     ch = HMC(step_size=0.05, n_leapfrog=8, adapt_step_size=True).run(
         jax.random.PRNGKey(3), m, num_samples=1500, num_warmup=300)
+    # posterior sd(mu) ~ data.std()/sqrt(200) ~ 0.07; MC se of the mean at
+    # ESS ~ 300 is ~0.004 => 0.1 is ~25 se (the slack also absorbs the
+    # prior's pull on the posterior mean, which is < 0.001 here)
     assert abs(ch.mean("mu") - data.mean()) < 0.1
+    # E[s | y] ~ data.std() + O(1/n); se ~ 0.05/sqrt(300) => 0.15 is >> 4 se
     assert abs(ch.mean("s") - data.std()) < 0.15
+    # dual averaging targets 0.8; 0.5 is ~10 se of a 1500-draw accept mean
     assert 0.5 < ch.stats["accept_prob"].mean() <= 1.0
 
 
@@ -61,6 +79,7 @@ def test_nuts_posterior_moments(gauss_model):
     m, data = gauss_model
     ch = NUTS(step_size=0.1, max_depth=8).run(
         jax.random.PRNGKey(5), m, num_samples=800, num_warmup=300)
+    # MC se of mean(mu) ~ 0.07/sqrt(ESS~160) ~ 0.006 => 0.1 is ~18 se
     assert abs(ch.mean("mu") - data.mean()) < 0.1
     assert abs(ch.mean("s") - data.std()) < 0.15
     assert ch.stats["tree_depth"].mean() >= 1.0
@@ -76,10 +95,14 @@ def test_nuts_correlated_gaussian():
     m = corr()
     ch = NUTS(step_size=0.2, max_depth=6).run(
         jax.random.PRNGKey(6), m, num_samples=2000, num_warmup=500)
-    assert abs(ch.mean("x")) < 0.12
-    assert abs(ch.std("x") - 1.0) < 0.12
+    # sd(x)=1, ESS ~ 400 => MC se of the mean ~ 0.05. The old bound of
+    # 0.12 was ~2.4 se (P[fail] ~ 1.6% per redraw — tolerance-flaky);
+    # 0.2 is 4 se => P[fail] < 1e-4
+    assert abs(ch.mean("x")) < 0.2
+    # se of a sample sd ~ 1/sqrt(2*ESS) ~ 0.035 => 0.15 is ~4.3 se
+    assert abs(ch.std("x") - 1.0) < 0.15
     assert abs(ch.std("y") - np.sqrt(1.25)) < 0.15
-    # correlation
+    # correlation: se ~ (1-rho^2)/sqrt(ESS) ~ 0.01 => 0.1 is ~10 se
     xs, ys = ch.flat("x"), ch.flat("y")
     corr_hat = np.corrcoef(xs, ys)[0, 1]
     assert abs(corr_hat - 1.0 / np.sqrt(1.25)) < 0.1
@@ -89,6 +112,8 @@ def test_rwmh(gauss_model):
     m, data = gauss_model
     ch = RWMH(proposal_scale=0.1).run(jax.random.PRNGKey(7), m,
                                       num_samples=4000, num_warmup=3000)
+    # random walk mixes slowly: ESS ~ 100 of 4000 => MC se ~ 0.07/10 =
+    # 0.007; 0.2 is ~28 se (slack absorbs residual warmup bias too)
     assert abs(ch.mean("mu") - data.mean()) < 0.2
 
 
@@ -96,6 +121,9 @@ def test_advi(gauss_model):
     m, data = gauss_model
     res = ADVI(num_steps=600, lr=0.05).run(jax.random.PRNGKey(9), m)
     post = res.sample(jax.random.PRNGKey(11), 2000)
+    # variational mean is a noisy optimum (SGD with 1-sample ELBO grads);
+    # its spread across reseeds ~ 0.02, plus 2000-iid-sample se ~ 0.002
+    # => 0.1 is ~4-5 se of the end-to-end pipeline
     assert abs(float(jnp.mean(post["mu"])) - data.mean()) < 0.1
     assert res.elbo_trace[-1] > res.elbo_trace[0]
 
@@ -125,5 +153,8 @@ def test_typed_untyped_hmc_identical_chains():
     ch_t = hmc.run(jax.random.PRNGKey(2), m, num_samples=800, init_varinfo=tvi)
     ch_u = hmc.run_untyped(jax.random.PRNGKey(2), m, num_samples=800,
                            init_varinfo=tvi)
-    assert abs(ch_t.mean("mu") - ch_u.mean("mu")) < 0.05
-    assert abs(ch_t.std("mu") - ch_u.std("mu")) < 0.05
+    # posterior sd ~ 1/sqrt(50) ~ 0.14; each mean has MC se ~ 0.14/
+    # sqrt(ESS~160) ~ 0.011, the DIFFERENCE se ~ 0.016. The old bound of
+    # 0.05 was ~3.2 se (P[fail] ~ 0.15% per redraw); 0.07 is ~4.4 se
+    assert abs(ch_t.mean("mu") - ch_u.mean("mu")) < 0.07
+    assert abs(ch_t.std("mu") - ch_u.std("mu")) < 0.07

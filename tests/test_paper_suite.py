@@ -58,5 +58,9 @@ def test_gauss_unknown_posterior_is_correct():
     ch = HMC(step_size=0.03, n_leapfrog=8, adapt_step_size=True).run(
         jax.random.PRNGKey(3), pm.model, num_samples=800, num_warmup=300)
     y = pm.data["y"]
+    # fixed seed; under a redraw (XLA re-tiling reseeds the float noise):
+    # posterior sd(m) ~ y.std()/sqrt(2000) ~ 0.02, MC se of the mean at
+    # ESS ~ 160 is ~0.0016 => 0.05 is ~30 se; same margin for sqrt(s).
+    # (see the tolerance policy note in tests/test_infer.py)
     assert abs(ch.mean("m") - y.mean()) < 0.05
     assert abs(np.sqrt(ch.mean("s")) - y.std()) < 0.05

@@ -8,7 +8,12 @@ Invariants under test:
   * typify: element sites group into one stacked site; idempotent lookups
   * data pipeline: host shards tile the global batch for every divisor
   * elastic planner: produced meshes are always valid
+  * minibatch estimator: mean over ALL size-B index sets == full density
+  * sharded likelihood: per-shard sums reassemble the full likelihood
+    for every shard count (the additive fact the mesh psum relies on)
 """
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -98,6 +103,49 @@ def test_context_algebra(s2, mu, ys, scale):
     lmb = float(m.logp_with_context(vals, MiniBatchContext(scale=scale)))
     assert np.isclose(lj, lp + ll, rtol=1e-5, atol=1e-5)
     assert np.isclose(lmb, lp + scale * ll, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# minibatch estimator / sharded likelihood
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-3, 3), min_size=2, max_size=6),
+       st.integers(1, 3), st.floats(-2, 2), st.floats(0.1, 4.0))
+def test_minibatch_estimator_unbiased(ys, bsz, mu, s2):
+    """E over ALL size-B subsets of the scaled minibatch estimator equals
+    the full-data density exactly (each row appears in the same fraction
+    of subsets, and the N/B scale cancels that fraction)."""
+    from repro.sharding import Minibatch, make_minibatch_logdensity
+
+    n = len(ys)
+    bsz = min(bsz, n)
+    m = _gdemo(jnp.asarray(ys, jnp.float32))
+    tvi = m.typed_varinfo(jax.random.PRNGKey(0)).link()
+    est = make_minibatch_logdensity(m, tvi, Minibatch(("y",), bsz))
+    assert est.num_total == n and est.scale == n / bsz
+    # pick a reproducible q in the linked space from (mu, s2)
+    q = tvi.flat() * 0.0 + jnp.asarray([np.log(s2), mu])[:tvi.flat().shape[0]]
+    full = float(m.make_logdensity_fn(tvi)(q))
+    vals = [float(est.logdensity_at_indices(q, jnp.asarray(c)))
+            for c in itertools.combinations(range(n), bsz)]
+    np.testing.assert_allclose(np.mean(vals), full, rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 5), st.floats(-2, 2), st.floats(0.05, 4.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_shard_count_invariance(shards, mu, s2, seed):
+    """Splitting the observations into ANY number of shards and summing
+    the per-shard likelihoods reproduces the unsharded likelihood — the
+    invariance the mesh path's psum all-reduce is built on."""
+    rng = np.random.default_rng(seed)
+    y = rng.normal(mu, 1.0, size=shards * 4).astype(np.float32)
+    m = _gdemo(jnp.asarray(y))
+    vals = {"s2": jnp.asarray(s2), "mu": jnp.asarray(mu)}
+    full = float(m.logp_with_context(vals, LikelihoodContext()))
+    parts = [float(m.bind(y=jnp.asarray(p)).logp_with_context(
+        vals, LikelihoodContext())) for p in np.split(y, shards)]
+    np.testing.assert_allclose(np.sum(parts), full, rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
